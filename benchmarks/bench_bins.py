@@ -1,0 +1,62 @@
+"""Paper Fig. 4: quantization-bin-size distributions per quantizer.
+
+The paper visualizes (i) quantized-code histograms (tail-bin utilization)
+and (ii) the distribution of bin sizes.  We report the summary statistics
+that the figure demonstrates:
+
+  * max / median bin size (PTQ's single huge bin vs PSQ's per-row bins vs
+    BHQ eliminating the large bins)
+  * tail-bin utilization: fraction of codes outside the modal bin
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (num_bins, quantize_bhq_stoch, quantize_psq_stoch,
+                        quantize_ptq_stoch, row_dynamic_range)
+
+from .common import grad_snapshot
+
+
+def _stats(codes, bin_sizes):
+    codes = codes.reshape(-1)
+    counts = jnp.bincount(codes, length=256)
+    modal = jnp.max(counts)
+    util = 1.0 - modal / codes.size
+    return {
+        "max_bin": float(jnp.max(bin_sizes)),
+        "med_bin": float(jnp.median(bin_sizes)),
+        "tail_util": float(util),
+    }
+
+
+def run(bits: int = 8):
+    rows = []
+    (gname, g), *_ = grad_snapshot()
+    B = num_bins(bits)
+    key = jax.random.PRNGKey(0)
+
+    qt = quantize_ptq_stoch(g, key, bits)
+    s = _stats(qt.codes, jnp.full((1,), 1.0 / qt.scale))
+    for k, v in s.items():
+        rows.append((f"fig4_bins/ptq/{k}", 0.0, v))
+
+    qt = quantize_psq_stoch(g, key, bits)
+    s = _stats(qt.codes, 1.0 / qt.scale.reshape(-1))
+    for k, v in s.items():
+        rows.append((f"fig4_bins/psq/{k}", 0.0, v))
+
+    qt = quantize_bhq_stoch(g, key, bits, block_rows=128)
+    s = _stats(qt.codes, 1.0 / qt.row_scale.reshape(-1))
+    for k, v in s.items():
+        rows.append((f"fig4_bins/bhq/{k}", 0.0, v))
+
+    # row dynamic-range sparsity (the left panel of Fig. 4): ratio of the
+    # 99th-percentile row range to the median row range
+    rr = row_dynamic_range(g)
+    rows.append(("fig4_row_range/p99_over_median", 0.0,
+                 float(jnp.percentile(rr, 99) /
+                       jnp.maximum(jnp.median(rr), 1e-12))))
+    return rows

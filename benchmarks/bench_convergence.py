@@ -1,0 +1,37 @@
+"""Paper Table 1 / Fig. 3(b,c) proxy: convergence vs (quantizer x bitwidth).
+
+Trains the paper's own transformer (statquant-tx, reduced) on learnable
+synthetic data under Exact / QAT / FQT x {PTQ, PSQ, BHQ} x {8, 5, 4, 3}
+bits and reports final training loss.  The paper's qualitative claims to
+reproduce: 8-bit FQT ~ QAT for all quantizers; as bits drop, PTQ degrades
+first and BHQ last.
+"""
+
+from __future__ import annotations
+
+import os
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.launch.train import train_loop
+
+STEPS = int(os.environ.get("BENCH_CONV_STEPS", "60"))
+
+
+def _run(policy, steps=STEPS, seed=0):
+    cfg = get_config("statquant-tx", smoke=True)
+    _, _, hist = train_loop(cfg, policy, steps=steps, batch_size=8,
+                            seq_len=32, lr=4e-3, log_every=max(steps // 8, 1),
+                            seed=seed, log_fn=lambda *a: None)
+    return hist[-1][1]
+
+
+def run():
+    rows = []
+    rows.append(("table1_loss/exact", 0.0, _run(QuantPolicy.exact())))
+    rows.append(("table1_loss/qat", 0.0, _run(QuantPolicy.qat())))
+    for quant in ("ptq", "psq", "bhq"):
+        for bits in (8, 5, 4, 3):
+            loss = _run(QuantPolicy.fqt(quant, bits, bhq_block=32))
+            rows.append((f"table1_loss/{quant}/{bits}b", 0.0, loss))
+    return rows

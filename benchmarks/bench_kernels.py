@@ -1,0 +1,50 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode (Python
+emulation — wall time is meaningless for TPU), so the timed entries are the
+XLA-compiled reference paths; the Pallas kernels are validated for
+correctness in tests/test_kernels.py and characterized here by their static
+VMEM/arithmetic-intensity properties (the quantities that matter on the
+target).  Derived column: arithmetic intensity (flops/byte) of the int8 GEMM
+at that tiling.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import QuantPolicy, fqt_matmul
+from repro.kernels import ref
+
+from .common import time_us
+
+
+def run():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    for (m, k, n) in [(512, 1024, 1024), (1024, 4096, 1024),
+                      (4096, 1024, 4096)]:
+        x = jax.random.normal(key, (m, k))
+        w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+
+        t_f32 = time_us(jax.jit(lambda a, b: a @ b), x, w, iters=5)
+        rows.append((f"kernel/f32_gemm/{m}x{k}x{n}", t_f32, 0.0))
+
+        pol = QuantPolicy.fqt("psq", 8, mode="native")
+        t_q8 = time_us(jax.jit(
+            lambda a, b: fqt_matmul(a, b, key, pol)), x, w, iters=5)
+        rows.append((f"kernel/native_q8_fqt_fwd/{m}x{k}x{n}", t_q8,
+                     t_q8 / t_f32))
+
+        # arithmetic intensity of the int8 GEMM tile (TPU target property):
+        # flops = 2 m k n; bytes = m k + k n (int8) + 4 m n (f32 out)
+        fl = 2.0 * m * k * n
+        by = m * k + k * n + 4.0 * m * n
+        rows.append((f"kernel/q8_arith_intensity/{m}x{k}x{n}", 0.0, fl / by))
+
+    # per-tile VMEM budget of the shipped tiling (128x512x512)
+    bm, bn, bk = 128, 512, 512
+    vmem = bm * bk + bk * bn + 4 * bm * bn + 4 * (2 * bm + 3 * bn)
+    rows.append(("kernel/q8_tile_vmem_bytes", 0.0, float(vmem)))
+    return rows

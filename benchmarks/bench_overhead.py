@@ -1,0 +1,45 @@
+"""Paper Sec. 4.3: quantization overhead relative to the GEMM it feeds.
+
+The paper reports (CPU, AVX): conv 480ms; range pass 11ms (PTQ) / 24ms
+(PSQ, BHQ); Householder transform 21ms — overhead small vs the GEMM.  We
+reproduce the same measurement on this host: time the fp32 GEMM, the
+range/scale/SR passes of each quantizer, and the BHQ grouping+transform.
+Derived column = overhead as a fraction of GEMM time.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (quantize_bhq_stoch, quantize_psq_stoch,
+                        quantize_ptq_stoch)
+
+from .common import time_us
+
+
+def run(n: int = 1024, d: int = 1024, k: int = 1024):
+    rows = []
+    key = jax.random.PRNGKey(0)
+    g = jax.random.normal(key, (n, d))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (d, k)) * 0.1
+
+    mm = jax.jit(lambda a, b: a @ b)
+    t_mm = time_us(mm, g, w)
+    rows.append(("overhead/gemm_f32", t_mm, 1.0))
+
+    for name, fn in [
+        ("ptq", jax.jit(lambda x, kk: quantize_ptq_stoch(x, kk, 8).dequant())),
+        ("psq", jax.jit(lambda x, kk: quantize_psq_stoch(x, kk, 8).dequant())),
+        ("bhq", jax.jit(lambda x, kk: quantize_bhq_stoch(
+            x, kk, 8, block_rows=128).dequant())),
+    ]:
+        t = time_us(fn, g, key)
+        rows.append((f"overhead/quantize_{name}", t, t / t_mm))
+
+    # range pass alone (the paper's 11ms/24ms analogue)
+    t_range_t = time_us(jax.jit(lambda x: (jnp.min(x), jnp.max(x))), g)
+    t_range_r = time_us(jax.jit(lambda x: (jnp.min(x, 1), jnp.max(x, 1))), g)
+    rows.append(("overhead/range_per_tensor", t_range_t, t_range_t / t_mm))
+    rows.append(("overhead/range_per_sample", t_range_r, t_range_r / t_mm))
+    return rows

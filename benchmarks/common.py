@@ -1,0 +1,66 @@
+"""Shared benchmark utilities: timing + gradient-snapshot capture."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.data import make_batch_for
+from repro.launch.train import train_loop
+from repro.layers import apply_norm
+from repro.layers.embeddings import lm_head
+from repro.models import build_model
+from repro.models.lm import (_forward_seq, _input_embed, _positions,
+                             cross_entropy)
+
+
+def time_us(fn, *args, iters: int = 20, warmup: int = 3) -> float:
+    for _ in range(warmup):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def grad_snapshot(arch: str = "statquant-tx", steps: int = 15,
+                  batch: int = 8, seq: int = 32, seed: int = 0):
+    """Train briefly, then capture activation gradients.
+
+    Returns [(name, grad_2d)] — the tensors Q_b2 quantizes.  This mirrors the
+    paper's Fig. 3/4/5 protocol: gradients of a partially trained model,
+    after the sparse-outlier structure (most tokens predicted ~correctly,
+    a few outliers) has emerged.
+    """
+    cfg = get_config(arch, smoke=True)
+    pol = QuantPolicy.qat()
+    params, _, _ = train_loop(cfg, pol, steps=steps, batch_size=batch,
+                              seq_len=seq, log_fn=lambda *a: None, seed=seed)
+    model = build_model(cfg)
+    b = make_batch_for(cfg, batch, seq, step=steps + 1, seed=seed)
+    key = jax.random.PRNGKey(seed)
+
+    def head_input(p):
+        h = _input_embed(p, b, cfg)
+        B, T = h.shape[0], h.shape[1]
+        pos = _positions(b, cfg, B, T)
+        h, _, _ = _forward_seq(p, h, key, pol, cfg, pos, want_cache=False)
+        return apply_norm(p["final_norm"], h, cfg.norm)
+
+    h_out = head_input(params)
+    # (a) logits gradient: softmax - onehot — the paper's Sec. 4.1 example
+    logits = lm_head(params["lm_head"], h_out, key, pol)
+    g_logits = jax.grad(
+        lambda lg: cross_entropy(lg, b["labels"], cfg.vocab_size))(logits)
+    # (b) hidden-state gradient flowing into the backbone
+    g_hidden = jax.grad(
+        lambda h: cross_entropy(lm_head(params["lm_head"], h, key, pol),
+                                b["labels"], cfg.vocab_size))(h_out)
+    return [("logits_grad", g_logits.reshape(-1, g_logits.shape[-1])),
+            ("hidden_grad", g_hidden.reshape(-1, g_hidden.shape[-1]))]

@@ -1,0 +1,35 @@
+"""Quickstart: fully-quantized training of a small LM in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Trains the paper's transformer (reduced) with 5-bit BHQ gradients — the
+paper's headline configuration — and compares against QAT on the same data.
+"""
+
+import jax
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.launch.train import train_loop
+
+
+def main():
+    cfg = get_config("statquant-tx", smoke=True)
+    print(f"arch: {cfg.name}  d_model={cfg.d_model} layers={cfg.n_layers}")
+
+    print("\n--- QAT (quantized forward, fp32 backward) ---")
+    _, _, qat_hist = train_loop(cfg, QuantPolicy.qat(),
+                                steps=60, batch_size=8, seq_len=32, lr=4e-3)
+
+    print("\n--- FQT, 5-bit BHQ gradients (the paper's headline) ---")
+    _, _, fqt_hist = train_loop(cfg, QuantPolicy.fqt("bhq", 5, bhq_block=32),
+                                steps=60, batch_size=8, seq_len=32, lr=4e-3)
+
+    print(f"\nfinal loss  QAT: {qat_hist[-1][1]:.4f}   "
+          f"FQT/BHQ@5b: {fqt_hist[-1][1]:.4f}")
+    print("(Theorem 1: both estimate the same gradient in expectation; "
+          "Theorem 2: BHQ keeps the added variance small at 5 bits.)")
+
+
+if __name__ == "__main__":
+    main()

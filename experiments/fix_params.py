@@ -1,0 +1,30 @@
+"""Recompute n_params / model_flops / useful ratio for existing cell JSONs
+(fixes an int32 overflow in the original count_params)."""
+import glob, json, math, os, sys
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+import jax
+from repro.configs import get_config, SHAPES
+from repro.models import build_model
+from repro.launch.roofline import model_flops
+from repro.launch.dryrun import active_param_frac
+
+cache = {}
+for path in glob.glob(os.path.join(os.path.dirname(__file__), "*", "*.json")):
+    rec = json.load(open(path))
+    arch = rec["arch"]
+    if arch not in cache:
+        model = build_model(get_config(arch))
+        ap = jax.eval_shape(lambda m=model: m.init(jax.random.PRNGKey(0)))
+        cache[arch] = sum(math.prod(l.shape) for l in jax.tree.leaves(ap))
+    n = cache[arch]
+    shape = SHAPES[rec["shape"]]
+    n_tok = (shape.global_batch * shape.seq_len
+             if shape.kind in ("train", "prefill") else shape.global_batch)
+    mf = model_flops(n, n_tok, "train" if shape.kind == "train" else "fwd",
+                     active_frac=rec["active_frac"])
+    rec["n_params"] = n
+    rec["model_flops_global"] = mf
+    fl = rec["per_device"]["flops"]
+    rec["useful_flops_ratio"] = (mf / rec["n_chips"] / fl) if fl else None
+    json.dump(rec, open(path, "w"), indent=1)
+    print(f"fixed {os.path.basename(path)}: n={n/1e9:.2f}B useful={rec['useful_flops_ratio']:.3f}")

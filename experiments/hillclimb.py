@@ -1,0 +1,74 @@
+"""Hillclimb runner: re-measure one cell with optimization overrides.
+
+    PYTHONPATH=src python experiments/hillclimb.py --arch minitron-4b \
+        --shape train_4k [--cp-attn] [--out experiments/hillclimb]
+
+Each run writes <arch>__<shape>__<tag>.json next to the baseline artifacts
+so before/after diffs land in EXPERIMENTS.md Sec. Perf.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+import jax
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--cp-attn", action="store_true",
+                    help="context-parallel attention constraint (Perf it. 6)")
+    ap.add_argument("--moe-dispatch", action="store_true",
+                    help="expert x capacity dispatch sharding (Perf it. 7)")
+    ap.add_argument("--compress-pods", action="store_true",
+                    help="unbiased int8 gradient all-reduce over the pod axis")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable activation checkpointing (uint8 FQT codes "
+                         "are the residuals - cheap to keep)")
+    ap.add_argument("--quant", default="bhq")
+    ap.add_argument("--grad-bits", type=int, default=5)
+    ap.add_argument("--tag", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="experiments/hillclimb")
+    args = ap.parse_args()
+
+    from repro.core import QuantPolicy
+    from repro.launch.dryrun import run_cell
+    from repro.launch.mesh import make_production_mesh
+    from repro.sharding import make_plan
+
+    policy = QuantPolicy.fqt(args.quant, args.grad_bits, mode="native",
+                             bhq_block=1024)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    extra = {}
+    tags = []
+    plan = make_plan(mesh)
+    if args.cp_attn:
+        extra["sdpa_hint"] = plan.attn_shardings
+        tags.append("cpattn")
+    if args.moe_dispatch:
+        extra["moe_hint"] = plan.moe_dispatch_sharding
+        tags.append("moedisp")
+    if args.compress_pods:
+        extra["compress_axis"] = "pod"
+        tags.append("int8ar")
+    if args.no_remat:
+        extra["remat"] = False
+        tags.append("noremat")
+    tag = args.tag or ("_".join(tags) if tags else "baseline")
+
+    rec = run_cell(args.arch, args.shape, multi_pod=args.multi_pod,
+                   policy=policy, mesh=mesh, extra_kwargs=extra or None)
+    rec["hillclimb_tag"] = tag
+    os.makedirs(args.out, exist_ok=True)
+    path = os.path.join(args.out, f"{args.arch}__{args.shape}__{tag}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    print("wrote", path)
+
+
+if __name__ == "__main__":
+    main()

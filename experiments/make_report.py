@@ -1,0 +1,72 @@
+"""Build the EXPERIMENTS.md roofline tables from experiments/dryrun/*.json.
+
+    PYTHONPATH=src python experiments/make_report.py [--dir experiments/dryrun]
+
+Emits markdown to stdout: the single-pod roofline table (one row per
+arch x shape), the multi-pod compile matrix, and summary statistics.
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def load(dirname):
+    cells = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        cells[(rec["arch"], rec["shape"], rec["mesh"])] = rec
+    return cells
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "dryrun"))
+    args = ap.parse_args()
+    cells = load(args.dir)
+
+    singles = {(a, s): r for (a, s, m), r in cells.items() if m == "16x16"}
+    multis = {(a, s): r for (a, s, m), r in cells.items() if m == "2x16x16"}
+
+    print("### Roofline table — single-pod 16x16 (256 chips), per device\n")
+    print("| arch | shape | kind | compute | memory | collective | bottleneck"
+          " | HBM GiB | useful (6ND/HLO) | coll GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(singles.items()):
+        t = r["roofline"]
+        pd = r["per_device"]
+        print(f"| {a} | {s} | {r['kind']} | {fmt_s(t['compute_s'])} | "
+              f"{fmt_s(t['memory_s'])} | {fmt_s(t['collective_s'])} | "
+              f"{t['bottleneck']} | {pd.get('hbm_gib', 0):.1f} | "
+              f"{(r['useful_flops_ratio'] or 0):.3f} | "
+              f"{pd['collective_bytes']/1e9:.2f} |")
+
+    print("\n### Multi-pod 2x16x16 (512 chips) compile matrix\n")
+    print("| arch | shape | compiled | compile_s | coll GB/dev (raw) |")
+    print("|---|---|---|---|---|")
+    for (a, s), r in sorted(multis.items()):
+        raw = r["per_device"].get("raw_uncorrected", r["per_device"])
+        print(f"| {a} | {s} | yes | {r['compile_s']} | "
+              f"{raw.get('collective_bytes', 0)/1e9:.2f} |")
+
+    n_expected_single = len(singles)
+    print(f"\nsingle-pod cells: {len(singles)}; multi-pod cells: "
+          f"{len(multis)}")
+
+    # bottleneck histogram
+    from collections import Counter
+    hist = Counter(r["roofline"]["bottleneck"] for r in singles.values())
+    print(f"bottleneck distribution: {dict(hist)}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,4 @@
+"""StatQuant-JAX: fully-quantized training (NeurIPS 2020 StatQuant) as a
+production multi-pod JAX framework."""
+
+__version__ = "1.0.0"

@@ -1,0 +1,10 @@
+"""Granite-3.0 2B base: GQA [hf:ibm-granite/granite-3.0-2b-base; hf]."""
+from .base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="granite-3-2b", family="dense", n_layers=40, d_model=2048,
+    n_heads=32, n_kv_heads=8, d_ff=8192, vocab_size=49_155,
+    act="swiglu", qkv_bias=False, rope="standard",
+    source="hf:ibm-granite/granite-3.0-2b-base; hf",
+)
+SMOKE = CONFIG.reduced()

@@ -1,0 +1,265 @@
+"""Block Householder Quantizer (BHQ) — StatQuant Sec. 4.2 / Appendix D.4-D.5.
+
+The paper's construction, adapted to TPU/XLA static shapes (DESIGN.md Sec. 3):
+
+  1. sort rows by magnitude ``M_i = ||g_i||_inf`` (descending);
+  2. pick the number of groups ``G`` by minimizing the paper's variance proxy
+     ``(sum_{i<=G} M_i)^2 / (N - G)`` — vectorized over *all* candidate G with
+     one prefix sum instead of the paper's CPU loop;
+  3. group ``i`` = the i-th largest row + ``~(N-G) * M_i / sum M`` small rows
+     (largest-remainder integerization so sizes sum to N);
+  4. scale rows by ``diag(s1, s2, ..., s2)`` with the Lagrangian-optimal
+     ``s1 ∝ λ1^{-1/3} m^{1/6}``, ``s2 ∝ λ2^{-1/3} m^{1/6}`` (Appendix D.4),
+     then apply the group Householder ``Q = I - 2 n nᵀ / ||n||²``,
+     ``n = 1/√m - e1`` — realized as two ``segment_sum``s, never as a matrix;
+  5. stochastically round with a per-group zero point.
+
+``Q`` is symmetric and involutory, so dequantization applies the *same*
+segment-sum Householder and divides by the row scales: unbiasedness
+``E[Q_b(g)] = g`` holds exactly for any grouping (Theorem 1 requirement).
+
+For large N (LM token rows) the grouping runs independently over row blocks of
+``block_rows`` via ``vmap`` — bounding the sort cost and keeping the paper's
+N≈128-row regime per group search.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .quantizers import QTensor, num_bins, stochastic_round, row_dynamic_range
+
+__all__ = ["BHQTensor", "quantize_bhq_stoch", "bhq_variance_bound"]
+
+_EPS = 1e-12
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class BHQTensor:
+    """Quantized tensor under the block Householder transform.
+
+    Dequantization is ``S^{-1}(codes + Z) = diag(1/s) · Q · (codes + Z)``
+    where ``Q`` is the (involutory) per-group Householder mix.  All fields are
+    flat over ``(n_blocks, block_rows, D)``.
+    """
+
+    codes: jax.Array        # (nb, n, D) uint8 in [0, B]
+    zero: jax.Array         # (nb, n, 1) per-row zero (== its group zero)
+    row_scale: jax.Array    # (nb, n, 1) s1 for large rows, s2 otherwise
+    n_vec: jax.Array        # (nb, n, 1) Householder normal entry per row
+    coef: jax.Array         # (nb, n, 1) 2/||n||² of the row's group (0 if m==1)
+    seg: jax.Array          # (nb, n) group id per sorted row
+    inv_perm: jax.Array     # (nb, n) maps sorted position -> original row
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    shape: tuple = dataclasses.field(metadata=dict(static=True))
+
+    def dequant(self) -> jax.Array:
+        t = self.codes.astype(jnp.float32) + self.zero
+        y = _apply_householder(t, self.seg, self.n_vec, self.coef)
+        y = y / self.row_scale
+        out = _unpermute(y, self.inv_perm)
+        return out.reshape(self.shape)
+
+    @property
+    def int8_codes(self) -> jax.Array:
+        offset = 1 << (self.bits - 1)
+        return (self.codes.astype(jnp.int16) - offset).astype(jnp.int8)
+
+    @property
+    def int8_offset(self) -> int:
+        return 1 << (self.bits - 1)
+
+    def dequant_epilogue(self, t: jax.Array) -> jax.Array:
+        """Apply ``S^{-1}`` + unpermute to ``t`` (same row layout as codes).
+
+        Used by the native int8 GEMM path: ``Q_b(g) @ Wᵀ`` is computed as
+        ``S^{-1}((codes + Z) @ Wᵀ)`` — the int GEMM runs on raw codes and this
+        O(N·d) VPU epilogue mixes the *output* rows (DESIGN.md Sec. 3).
+        """
+        y = _apply_householder(t, self.seg, self.n_vec, self.coef)
+        y = y / self.row_scale
+        return _unpermute(y, self.inv_perm)
+
+
+def _apply_householder(x: jax.Array, seg: jax.Array, n_vec: jax.Array,
+                       coef: jax.Array) -> jax.Array:
+    """y = Q x per group: y_j = x_j - n_j * coef_g * (nᵀ x)_g, via segment_sum.
+
+    Shapes: x (nb, n, D), seg (nb, n), n_vec/coef (nb, n, 1).
+    """
+    def one(xb, segb, nb_, cb):
+        n = xb.shape[0]
+        # (nᵀ x)_g = sum_j n_j x_j  per group
+        ntx = jax.ops.segment_sum(nb_ * xb, segb, num_segments=n)  # (n, D)
+        return xb - nb_ * cb * ntx[segb]
+    return jax.vmap(one)(x, seg, n_vec, coef)
+
+
+def _unpermute(x: jax.Array, inv_perm: jax.Array) -> jax.Array:
+    def one(xb, pb):
+        return jnp.zeros_like(xb).at[pb].set(xb)
+    return jax.vmap(one)(x, inv_perm)
+
+
+def _largest_remainder(weights: jax.Array, total: jax.Array,
+                       valid: jax.Array) -> jax.Array:
+    """Integerize ``total * weights`` (sum over valid == total), static shape.
+
+    weights: (n,) nonneg, zero where ~valid. Returns int32 sizes (n,).
+    """
+    n = weights.shape[0]
+    wsum = jnp.maximum(jnp.sum(weights), _EPS)
+    raw = total * weights / wsum
+    base = jnp.floor(raw).astype(jnp.int32)
+    base = jnp.where(valid, base, 0)
+    rem = raw - base
+    rem = jnp.where(valid, rem, -1.0)
+    short = total - jnp.sum(base)
+    # give +1 to the `short` largest remainders
+    order = jnp.argsort(-rem)
+    rank = jnp.zeros(n, jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return base + jnp.where((rank < short) & valid, 1, 0)
+
+
+def _g_candidates(n: int):
+    """Static candidate group counts: 1, 2, 4, ... n//2, and n.
+
+    G = n (singleton groups, Q = I) makes BHQ degrade exactly to PSQ —
+    essential when row magnitudes are uniform (early training), where any
+    grouping with m >= 2 *amplifies* variance ~m^2 (Appendix D.4 bound with
+    lambda2 ~ lambda1).  Caught by tests/test_system.py."""
+    cands, g = [], 1
+    while g <= max(n // 2, 1):
+        cands.append(g)
+        g *= 2
+    if n not in cands:
+        cands.append(n)
+    return cands
+
+
+def _select_g(mag_s: jax.Array, rng_s: jax.Array, n: int, g_search: str):
+    """Pick the number of groups G.
+
+    ``paper``   — the paper's Appendix-D.5 proxy (sum_{i<=G} M_i)^2/(N-G),
+                  which idealizes lambda2 ~ 0 and can badly mis-group when
+                  several comparable outliers exist.
+    ``refined`` — (default) score each candidate G with the *full* D.4 bound
+                  per group, sum_i (l1_i^{2/3} m_i^{-1/3} + l2^{2/3} m_i^{2/3})^3
+                  with l1_i = R(row_i), l2 = 2 M_{G+1}, m_i the heuristic
+                  proportional group size.  O(N) per candidate, log2(N)
+                  candidates.  DESIGN.md Sec. 6 records this adaptation.
+    """
+    if g_search == "paper":
+        csum = jnp.cumsum(mag_s)
+        gs_idx = jnp.arange(1, n, dtype=jnp.float32)
+        score = (csum[:-1] ** 2) / (n - gs_idx)
+        return jnp.argmin(score).astype(jnp.int32) + 1
+    idx = jnp.arange(n, dtype=jnp.float32)
+    scores = []
+    cands = _g_candidates(n)
+    for G in cands:
+        mask = idx < G
+        msum = jnp.maximum(jnp.sum(jnp.where(mask, mag_s, 0.0)), _EPS)
+        m_i = 1.0 + (n - G) * mag_s / msum                    # heuristic sizes
+        lam1 = jnp.maximum(rng_s, _EPS)
+        lam2 = 2.0 * (mag_s[G] if G < n else 0.0) + _EPS
+        term = (lam1 ** (2 / 3) * m_i ** (-1 / 3)
+                + lam2 ** (2 / 3) * m_i ** (2 / 3)) ** 3
+        scores.append(jnp.sum(jnp.where(mask, term, 0.0)))
+    best = jnp.argmin(jnp.stack(scores))
+    return jnp.asarray(cands, dtype=jnp.int32)[best]
+
+
+def _bhq_block(g: jax.Array, key: jax.Array, bits: int, g_search: str):
+    """BHQ over one (n, D) block. Returns fields for BHQTensor (block-local)."""
+    B = float(num_bins(bits))
+    n, d = g.shape
+
+    # --- step 1: sort rows by infinity-norm magnitude, descending ----------
+    mag = jnp.max(jnp.abs(g), axis=-1)                       # M_i
+    perm = jnp.argsort(-mag)                                 # sorted -> original
+    gs = g[perm]
+    mag_s = mag[perm]
+
+    # --- step 2: choose the number of groups G ------------------------------
+    rng_s = row_dynamic_range(gs)
+    G = _select_g(mag_s, rng_s, n, g_search)                 # traced scalar
+
+    idx = jnp.arange(n, dtype=jnp.int32)
+    is_large = idx < G
+
+    # --- step 3: group sizes ∝ magnitude, largest-remainder -----------------
+    w = jnp.where(is_large, mag_s, 0.0)
+    extras = _largest_remainder(w, (n - G).astype(jnp.float32), is_large)
+    # small row p (p = j - G in sorted order) joins group searchsorted(cum, p)
+    cum = jnp.cumsum(extras)                                  # (n,)
+    p = jnp.clip(idx - G, 0, n - 1)
+    small_seg = jnp.searchsorted(cum, p, side="right").astype(jnp.int32)
+    seg = jnp.where(is_large, idx, jnp.clip(small_seg, 0, n - 1))
+
+    m = (extras + 1).astype(jnp.float32)                      # group sizes (valid < G)
+    m = jnp.maximum(m, 1.0)
+
+    # --- step 4: optimal scales (Appendix D.4) -------------------------------
+    lam1 = jnp.maximum(rng_s, _EPS)                           # per sorted row; rows < G are the large ones
+    lam1_g = jnp.where(is_large, lam1, 1.0)                   # (n,) valid for g < G
+    small_mag = jnp.where(is_large, 0.0, mag_s)
+    lam2_g = 2.0 * jax.ops.segment_max(small_mag, seg, num_segments=n)
+    lam2_g = jnp.maximum(lam2_g, _EPS)
+
+    m_g = jnp.maximum(jax.ops.segment_sum(jnp.ones(n), seg, num_segments=n), 1.0)
+    denom = lam1_g ** (2 / 3) * m_g ** (-1 / 3) + lam2_g ** (2 / 3) * m_g ** (2 / 3)
+    s1 = B * lam1_g ** (-1 / 3) * m_g ** (1 / 6) / denom
+    s2 = B * lam2_g ** (-1 / 3) * m_g ** (1 / 6) / denom
+
+    row_scale = jnp.where(is_large, s1[seg], s2[seg])[:, None]   # (n,1)
+
+    # Householder normal: n_j = 1/sqrt(m) - [j is the group's large row]
+    sqrt_m = jnp.sqrt(m_g)[seg]
+    n_vec = (1.0 / sqrt_m - is_large.astype(jnp.float32))[:, None]
+    # 2/||n||² = sqrt(m)/(sqrt(m)-1); zero for singleton groups (Q = I)
+    coef_g = jnp.where(m_g > 1.5, jnp.sqrt(m_g) / jnp.maximum(jnp.sqrt(m_g) - 1.0, _EPS), 0.0)
+    coef = coef_g[seg][:, None]
+
+    # --- step 5: transform, per-group zero, stochastic round ----------------
+    xs = row_scale * gs
+    y = _apply_householder(xs[None], seg[None], n_vec[None], coef[None])[0]
+    row_min = jnp.min(y, axis=-1)
+    zero_g = jax.ops.segment_min(row_min, seg, num_segments=n)
+    zero = zero_g[seg][:, None]
+    codes = stochastic_round(y - zero, key)
+    codes = jnp.clip(codes, 0.0, B).astype(jnp.uint8)
+
+    inv_perm = perm  # y rows are in sorted order; scatter back via perm
+    return codes, zero, row_scale, n_vec, coef, seg, inv_perm
+
+
+def quantize_bhq_stoch(x: jax.Array, key: jax.Array, bits: int = 8,
+                       block_rows: int = 1024,
+                       g_search: str = "refined") -> BHQTensor:
+    """BHQ over row blocks. x: (..., D) -> rows = prod(leading dims)."""
+    shape = x.shape
+    rows = x.reshape(-1, shape[-1])
+    n = rows.shape[0]
+    blk = block_rows if (n % block_rows == 0 and n > block_rows) else n
+    nb = n // blk
+    gb = rows.reshape(nb, blk, shape[-1])
+    keys = jax.random.split(key, nb)
+    codes, zero, rs, nv, cf, seg, ip = jax.vmap(
+        partial(_bhq_block, bits=bits, g_search=g_search))(gb, keys)
+    return BHQTensor(codes=codes, zero=zero, row_scale=rs, n_vec=nv, coef=cf,
+                     seg=seg, inv_perm=ip, bits=bits, shape=shape)
+
+
+def bhq_variance_bound(qt: BHQTensor) -> jax.Array:
+    """Eq. (13): Var <= D/4 * ||S^{-1}||_F^2 = D/4 * sum_j (1/s_j)^2.
+
+    (The Householder factor is orthogonal, so ||S^{-1}||_F = ||diag(1/s)||_F.)
+    """
+    d = qt.shape[-1]
+    return d / 4.0 * jnp.sum(1.0 / qt.row_scale ** 2)

@@ -1,0 +1,198 @@
+"""Fully-Quantized-Training matmul (paper Eq. 3/5/6) as a ``custom_vjp``.
+
+This is the paper's computational primitive.  For a linear layer
+``Y = X @ W``:
+
+  forward   (Eq. 3):  ``Y = Q_f(X) @ Q_theta(W)``          (deterministic PTQ)
+  backward  (Eq. 6, with gradient bifurcation of App. E):
+      ``dW = Q_f(X)ᵀ @ Q_b1(dY)``   Q_b1 = stochastic per-tensor PTQ (8 bit)
+      ``dX = Q_b2(dY) @ Q_theta(W)ᵀ``  Q_b2 ∈ {PTQ, PSQ, BHQ} (4-8 bit)
+
+Two execution paths share the same quantizers:
+
+  * ``simulate`` — quantize-dequantize in fp32, exactly the paper's GPU
+    simulation (App. E).  Used for accuracy / variance experiments.
+  * ``native``  — the integer codes feed ``lax.dot_general(int8, int8,
+    preferred_element_type=int32)`` (TPU MXU int8) with affine zero-point
+    corrections; scales fold *after* accumulation because the paper's recipe
+    keeps them on non-contraction axes (DESIGN.md Sec. 3).  Used by the
+    dry-run / deployment so roofline FLOP & byte counts reflect real int8
+    execution.
+
+STE (Eq. 4): the backward differentiates through the *quantized* operands —
+no gradient flows into the quantizer itself.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .bhq import BHQTensor, quantize_bhq_stoch
+from .policy import QuantPolicy
+from .quantizers import (QTensor, quantize_psq_stoch, quantize_ptq_det,
+                         quantize_ptq_stoch)
+
+__all__ = ["fqt_matmul", "qdot"]
+
+
+def _float0_like(x):
+    return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+# ---------------------------------------------------------------------------
+# Integer GEMM with affine corrections (native path)
+# ---------------------------------------------------------------------------
+
+def _codes_dot_f32(a_codes: jax.Array, b_codes: jax.Array,
+                   bits_a: int, bits_b: int) -> jax.Array:
+    """fp32 value of ``a_codes @ b_codes`` via an int8 MXU dot.
+
+    Codes are unsigned in [0, 2^b-1]; we shift by 2^(b-1) into signed int8 so
+    the accumulator stays within int32 even at K ~ 50k, then undo the shift
+    with rank-1 corrections (exact in int32, summed in fp32).
+    """
+    off_a, off_b = 1 << (bits_a - 1), 1 << (bits_b - 1)
+    a8 = (a_codes.astype(jnp.int16) - off_a).astype(jnp.int8)
+    b8 = (b_codes.astype(jnp.int16) - off_b).astype(jnp.int8)
+    acc = jax.lax.dot_general(
+        a8, b8, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.int32).astype(jnp.float32)
+    row_a = jnp.sum(a8.astype(jnp.int32), axis=1).astype(jnp.float32)   # (R,)
+    col_b = jnp.sum(b8.astype(jnp.int32), axis=0).astype(jnp.float32)   # (M,)
+    k = a_codes.shape[1]
+    return (acc + off_b * row_a[:, None] + off_a * col_b[None, :]
+            + float(k * off_a * off_b))
+
+
+def qdot(a_codes, a_scale, a_zero, bits_a,
+         b_codes, b_scale, b_zero, bits_b) -> jax.Array:
+    """``Â @ B̂`` for affine-quantized operands, int8 GEMM main term.
+
+    ``Â = a_codes/a_scale + a_zero`` with a_scale/a_zero scalar or (R, 1);
+    ``B̂ = b_codes/b_scale + b_zero`` with b_scale/b_zero scalar (per-tensor).
+
+        Â B̂ = [Ca Cb]/(sa sb) + za*colsum(Cb)/sb + zb*rowsum(Ca)/sa + K za zb
+    """
+    k = a_codes.shape[1]
+    main = _codes_dot_f32(a_codes, b_codes, bits_a, bits_b)
+    col_b = jnp.sum(b_codes.astype(jnp.float32), axis=0)        # (M,)
+    row_a = jnp.sum(a_codes.astype(jnp.float32), axis=1)[:, None]  # (R,1)
+    a_scale = jnp.asarray(a_scale)
+    a_zero = jnp.asarray(a_zero)
+    return (main / (a_scale * b_scale)
+            + a_zero * (col_b / b_scale)[None, :]
+            + b_zero * (row_a / a_scale)
+            + k * a_zero * b_zero)
+
+
+def _qt_matmul_native(aq: QTensor, bq: QTensor) -> jax.Array:
+    """Â @ B̂ for two QTensors (a may be per-row; b must be per-tensor)."""
+    a2 = aq.codes.reshape(-1, aq.shape[-1])
+    return qdot(a2, aq.scale, aq.zero, aq.bits,
+                bq.codes, bq.scale, bq.zero, bq.bits)
+
+
+def _qt_matmul_tn_native(aq: QTensor, bq: QTensor) -> jax.Array:
+    """Âᵀ @ B̂ (contraction over rows; both per-tensor)."""
+    at = aq.codes.reshape(-1, aq.shape[-1]).T                    # (K, R)
+    return qdot(at, aq.scale, aq.zero, aq.bits,
+                bq.codes.reshape(-1, bq.shape[-1]), bq.scale, bq.zero, bq.bits)
+
+
+def _qt_matmul_nt_native(aq, bq: QTensor) -> jax.Array:
+    """Â @ B̂ᵀ where Â is a QTensor or BHQTensor, B̂ a per-tensor QTensor.
+
+    For BHQ the S^{-1} epilogue commutes with the right-matmul
+    (DESIGN.md Sec. 3): Q_b(g) @ B̂ᵀ = S^{-1}((codes + Z) @ B̂ᵀ).
+    """
+    bt = bq.codes.reshape(-1, bq.shape[-1]).T                    # (M, K)
+    if isinstance(aq, BHQTensor):
+        nb, blk, m = aq.codes.shape
+        flat = aq.codes.reshape(nb * blk, m)
+        zero = aq.zero.reshape(nb * blk, 1)
+        t = qdot(flat, jnp.float32(1.0), zero, aq.bits,
+                 bt, bq.scale, bq.zero, bq.bits)                 # (R, K)
+        t = t.reshape(nb, blk, -1)
+        return aq.dequant_epilogue(t).reshape(nb * blk, -1)
+    a2 = aq.codes.reshape(-1, aq.shape[-1])
+    return qdot(a2, aq.scale, aq.zero, aq.bits,
+                bt, bq.scale, bq.zero, bq.bits)
+
+
+# ---------------------------------------------------------------------------
+# Gradient quantizer dispatch (Q_b2)
+# ---------------------------------------------------------------------------
+
+def _quantize_grad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
+    if policy.grad_quantizer == "ptq":
+        return quantize_ptq_stoch(g2d, key, policy.grad_bits)
+    if policy.grad_quantizer == "psq":
+        return quantize_psq_stoch(g2d, key, policy.grad_bits)
+    return quantize_bhq_stoch(g2d, key, policy.grad_bits,
+                              block_rows=policy.bhq_block)
+
+
+# ---------------------------------------------------------------------------
+# The custom_vjp primitive
+# ---------------------------------------------------------------------------
+
+@partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _fqt(policy: QuantPolicy, x: jax.Array, w: jax.Array, key: jax.Array):
+    y, _ = _fqt_fwd(policy, x, w, key)
+    return y
+
+
+def _fqt_fwd(policy: QuantPolicy, x, w, key):
+    lead = x.shape[:-1]
+    dtype = x.dtype
+    # quantizer math in fp32 regardless of activation dtype (bf16 streams)
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    xq = quantize_ptq_det(x2, policy.act_bits)
+    wq = quantize_ptq_det(w.astype(jnp.float32), policy.weight_bits)
+    if policy.mode == "native":
+        y = _qt_matmul_native(xq, wq)
+    else:
+        y = xq.dequant() @ wq.dequant()
+    return (y.reshape(*lead, w.shape[-1]).astype(dtype),
+            (xq, wq, key, lead))
+
+
+def _fqt_bwd(policy: QuantPolicy, res, g):
+    xq, wq, key, lead = res
+    dtype = g.dtype          # cotangent dtype == stream dtype (y = x.dtype)
+    g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    if not policy.quantize_bwd:
+        # QAT (Eq. 4): full-precision gradient through quantized operands.
+        dw = xq.dequant().T @ g2
+        dx = g2 @ wq.dequant().T
+    else:
+        k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
+        gq1 = quantize_ptq_stoch(g2, k1, policy.wgrad_bits)      # Q_b1
+        gq2 = _quantize_grad(g2, k2, policy)                     # Q_b2
+        if policy.mode == "native":
+            dw = _qt_matmul_tn_native(xq, gq1)
+            dx = _qt_matmul_nt_native(gq2, wq)
+        else:
+            dw = xq.dequant().T @ gq1.dequant()
+            dx = gq2.dequant() @ wq.dequant().T
+    dx = dx.reshape(*lead, -1).astype(dtype)   # activation-grad in stream dtype
+    return dx, dw, _float0_like(key)           # weight-grad stays fp32 (master)
+
+
+_fqt.defvjp(_fqt_fwd, _fqt_bwd)
+
+
+def fqt_matmul(x: jax.Array, w: jax.Array, key: jax.Array,
+               policy: QuantPolicy) -> jax.Array:
+    """``x @ w`` under the given quantization policy.
+
+    x: (..., K) activations; w: (K, M) weights; key: PRNG key consumed by the
+    backward-pass stochastic quantizers (ignored under exact/QAT policies).
+    """
+    if not policy.enabled:
+        return x @ w
+    return _fqt(policy, x, w, key)

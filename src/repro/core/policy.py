@@ -1,0 +1,65 @@
+"""Quantization policy — the single config object threaded through the stack.
+
+Mirrors the paper's experimental setup (Appendix E):
+
+  * forward: ``Q_f``/``Q_theta`` deterministic 8-bit PTQ on every linear layer
+  * backward, with gradient bifurcation (Banner et al. / paper Eq. in App. E):
+      - weight-grad GEMM uses ``Q_b1`` = stochastic per-tensor PTQ at 8 bits
+      - activation-grad GEMM uses ``Q_b2`` ∈ {PTQ, PSQ, BHQ} at 4-8 bits
+
+Three canonical modes:
+  ``exact()``  full-precision training        (paper's "Exact" rows)
+  ``qat()``    quantized forward, FP backward (paper's "QAT" rows)
+  ``fqt(...)`` fully quantized training       (paper's "b-bit FQT" rows)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+__all__ = ["QuantPolicy", "EXACT", "QAT", "FQT8_BHQ"]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantPolicy:
+    enabled: bool = True           # False => full-precision ("exact")
+    mode: str = "simulate"         # "simulate" (fp32 QDQ) | "native" (int8 GEMM)
+    act_bits: int = 8              # Q_f bits
+    weight_bits: int = 8           # Q_theta bits
+    quantize_bwd: bool = True      # False => QAT (backward in full precision)
+    wgrad_bits: int = 8            # Q_b1 bits (stochastic per-tensor)
+    grad_bits: int = 8             # Q_b2 bits
+    grad_quantizer: str = "bhq"    # Q_b2 type: "ptq" | "psq" | "bhq"
+    bhq_block: int = 1024          # BHQ row-block size
+    # --- beyond-paper knobs ---
+    compress_dp_grads: bool = False  # int8 unbiased gradient all-reduce
+    dp_grad_bits: int = 8
+
+    def __post_init__(self):
+        assert self.grad_quantizer in ("ptq", "psq", "bhq")
+        assert self.mode in ("simulate", "native")
+        assert 2 <= self.grad_bits <= 8 and 2 <= self.act_bits <= 8
+
+    @staticmethod
+    def exact() -> "QuantPolicy":
+        return QuantPolicy(enabled=False)
+
+    @staticmethod
+    def qat(act_bits: int = 8, weight_bits: int = 8,
+            mode: str = "simulate") -> "QuantPolicy":
+        return QuantPolicy(enabled=True, quantize_bwd=False,
+                           act_bits=act_bits, weight_bits=weight_bits, mode=mode)
+
+    @staticmethod
+    def fqt(grad_quantizer: str = "bhq", grad_bits: int = 8,
+            act_bits: int = 8, weight_bits: int = 8,
+            mode: str = "simulate", **kw) -> "QuantPolicy":
+        return QuantPolicy(enabled=True, quantize_bwd=True,
+                           grad_quantizer=grad_quantizer, grad_bits=grad_bits,
+                           act_bits=act_bits, weight_bits=weight_bits,
+                           mode=mode, **kw)
+
+
+EXACT = QuantPolicy.exact()
+QAT = QuantPolicy.qat()
+FQT8_BHQ = QuantPolicy.fqt("bhq", 8)

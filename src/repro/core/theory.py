@@ -1,0 +1,112 @@
+"""Statistical instrumentation for Theorems 1 & 2.
+
+Utilities to *measure* what the paper *proves*:
+
+  * :func:`empirical_mean_and_variance` — Monte-Carlo E[Q(x)] and Var[Q(x)|x]
+    for any stochastic quantizer (Theorem 1 / quantizer-variance checks);
+  * :func:`quantizer_variance` — exact conditional variance of the SR noise
+    given the transform (sum of p(1-p) over entries, Proposition 4);
+  * :func:`fqt_gradient_stats` — bias/variance of the FQT gradient of an
+    arbitrary model relative to its QAT gradient (Theorem 1/2 end-to-end);
+  * :func:`theorem2_path_norms` — the deterministic weights
+    ``sum_k ||gamma^{(k,l)}||_2^2`` for a small MLP, via exact Jacobians
+    (used to evaluate the Theorem-2 upper bound Eq. 8 in tests/benchmarks).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Sequence
+
+import jax
+import jax.flatten_util
+import jax.numpy as jnp
+
+__all__ = [
+    "empirical_mean_and_variance",
+    "fqt_gradient_stats",
+    "theorem2_path_norms",
+    "variance_of_tree",
+]
+
+
+def variance_of_tree(trees: Sequence) -> float:
+    """Var[X] := sum of per-entry variances over a list of pytree samples."""
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+    var = jax.tree.map(lambda s: jnp.sum(jnp.var(s, axis=0)), stacked)
+    return float(sum(jax.tree.leaves(var)))
+
+
+def empirical_mean_and_variance(quant_fn: Callable, x: jax.Array,
+                                key: jax.Array, n_samples: int = 256):
+    """Monte-Carlo (E[Q(x)], Var[Q(x)|x]) for a stochastic quantizer.
+
+    quant_fn(x, key) -> dequantized array.  Returns (mean, total_variance).
+    """
+    keys = jax.random.split(key, n_samples)
+    samples = jax.lax.map(lambda k: quant_fn(x, k), keys)
+    mean = jnp.mean(samples, axis=0)
+    var = jnp.sum(jnp.var(samples, axis=0))
+    return mean, var
+
+
+def fqt_gradient_stats(grad_fn: Callable, key: jax.Array,
+                       n_samples: int = 64) -> Dict[str, jax.Array]:
+    """Bias/variance of a stochastic gradient estimator.
+
+    grad_fn(key) -> gradient pytree (the FQT gradient with quantizer
+    randomness keyed by ``key``; the batch B is held fixed by the caller, so
+    the returned stats are the *conditional-on-B* quantities of Theorems 1/2).
+    """
+    keys = jax.random.split(key, n_samples)
+    grads = [grad_fn(k) for k in keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+    mean = jax.tree.map(lambda s: jnp.mean(s, axis=0), stacked)
+    var = sum(jax.tree.leaves(
+        jax.tree.map(lambda s: jnp.sum(jnp.var(s, axis=0)), stacked)))
+    return {"mean": mean, "variance": var}
+
+
+def theorem2_path_norms(layer_fns: Sequence[Callable], params: Sequence,
+                        x0: jax.Array):
+    """``sum_{k<=l} ||gamma^{(k,l)}||_2^2`` for a feed-forward chain.
+
+    layer_fns[l](h, params[l]) -> h_next.  Returns a list over l of the
+    Theorem-2 weight multiplying the layer-l quantizer variance in Eq. (8).
+
+    gamma^{(k,l)} = (prod_{i=l..k+1} J^{(i)}) K^{(k)} with
+    J^(i) = d vec(H^i)/d vec(H^{i-1}),  K^(k) = d vec(H^k)/d vec(Theta^k).
+    Exact Jacobians — only feasible for small test networks.
+    """
+    L = len(layer_fns)
+    hs = [x0]
+    for l in range(L):
+        hs.append(layer_fns[l](hs[-1], params[l]))
+
+    def flat_jac(f, arg):
+        j = jax.jacobian(f)(arg)
+        return j.reshape(-1, arg.size) if hasattr(arg, "size") else j
+
+    js = []   # J^(l): d vec(h_l) / d vec(h_{l-1}),  (out, in)
+    ks = []   # K^(l): d vec(h_l) / d vec(theta_l)
+    for l in range(L):
+        h_in, p = hs[l], params[l]
+        jh = jax.jacobian(lambda h: layer_fns[l](h, p))(h_in)
+        js.append(jh.reshape(hs[l + 1].size, h_in.size))
+        p_flat, unravel = jax.flatten_util.ravel_pytree(p)
+        jp = jax.jacobian(
+            lambda pf: layer_fns[l](h_in, unravel(pf)))(p_flat)
+        ks.append(jp.reshape(hs[l + 1].size, p_flat.size))
+
+    # gamma^{(k,l)}: start from K^{(k)} and push forward through J's.
+    # In the paper's row-vector convention vec(grad_H^l) gamma^{(k,l)};
+    # with column Jacobians here gamma^{(k,l)} = K^(k)ᵀ prod J^ᵀ — norms match.
+    weights = []
+    for l in range(L):
+        total = jnp.float32(0.0)
+        for k in range(l + 1):
+            gamma = ks[k].T                       # (theta_k, h_k)
+            for i in range(k + 1, l + 1):
+                gamma = gamma @ js[i].T           # push to h_l
+            total = total + jnp.linalg.norm(gamma, ord=2) ** 2
+        weights.append(total)
+    return weights

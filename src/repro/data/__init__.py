@@ -1,0 +1,4 @@
+from .synthetic import SyntheticLM, make_batch_for
+from .pipeline import ShardedLoader, Prefetcher
+
+__all__ = ["SyntheticLM", "make_batch_for", "ShardedLoader", "Prefetcher"]

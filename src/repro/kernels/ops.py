@@ -1,0 +1,106 @@
+"""jit'd wrappers wiring the Pallas kernels to the paper's quantizer algebra.
+
+``fqt_linear_fwd_kernel`` computes the forward ``Q_f(X) @ Q_theta(W)`` with
+one fused int8 GEMM.  Given affine quantizations
+
+    X^ = (Cx + ox)/sx + zx      (per-row scale sx_i, zero zx_i; ox = 2^(b-1))
+    W^ = (Cw + ow)/sw + zw      (per-tensor)
+
+the exact product expands into the kernel's epilogue form
+out = acc*rs_i*cs_j + rs_i*u_j + a_i + b_j with
+
+    rs_i = 1/sx_i,  cs_j = 1/sw
+    u_j  = (colsum_Cw_j + K*ow)/sw * ox ... folded with zero terms (below)
+    a_i  = zx_i * K * zw + ...            (all row-only terms)
+    b_j  = zw-free col-only terms
+
+(The full derivation is in the code — each term is tagged.)  On CPU the
+kernels run under interpret=True; on TPU the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .q8_matmul import q8_matmul
+from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
+from . import ref
+
+__all__ = ["fused_qlinear", "fused_quantize_psq", "fused_quantize_ptq"]
+
+
+def fused_qlinear(x: jax.Array, w: jax.Array, key: jax.Array,
+                  act_bits: int = 8, weight_bits: int = 8,
+                  interpret: bool = True, use_kernels: bool = True):
+    """Forward FQT linear via the fused kernels.
+
+    1. per-row (PSQ-style) stochastic quantize of x -> int8 codes
+    2. per-tensor deterministic quantize of w       -> int8 codes
+    3. fused int8 GEMM + affine epilogue            -> f32 output
+
+    Matches ``ref``-path dequant matmul to fp32 tolerance (tests sweep
+    shapes/dtypes).  Returns (y, aux dict with the code tensors).
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2
+    ox = 1 << (act_bits - 1)
+    ow = 1 << (weight_bits - 1)
+    Bw = (1 << weight_bits) - 1
+
+    rbits = jax.random.bits(key, (M, K), jnp.uint32)
+    if use_kernels:
+        cx, sx, zx = quantize_sr_rows(x, rbits, act_bits, interpret=interpret)
+    else:
+        cx, sx, zx = ref.quantize_sr_rows_ref(x, rbits, act_bits)
+
+    # deterministic per-tensor weight quantization (round-to-nearest)
+    lo, hi = jnp.min(w), jnp.max(w)
+    sw = Bw / jnp.maximum(hi - lo, 1e-12)
+    cw = (jnp.clip(jnp.round(sw * (w - lo)), 0, Bw) - ow).astype(jnp.int8)
+    zw = lo
+
+    # Factor both operands affinely (kernel docstring):
+    #   X^_ik = ax_i*Cx_ik + bx_i,   ax = 1/sx,  bx = ox/sx + zx
+    #   W^_kj = aw  *Cw_kj + bw,     aw = 1/sw,  bw = ow/sw + zw
+    # =>  X^W^ = (ax aw) CxCw + ax bw rowsum(Cx) + bx (aw colsum(Cw) + K bw)
+    colsum_cw = jnp.sum(cw.astype(jnp.int32), axis=0).astype(jnp.float32)
+    rowsum_cx = jnp.sum(cx.astype(jnp.int32), axis=1).astype(jnp.float32)
+    ax = 1.0 / sx[:, 0]                                        # (M,)
+    bx = ox * ax + zx[:, 0]                                    # (M,)
+    aw = 1.0 / sw
+    bw = ow * aw + zw
+    rs, cs = ax, jnp.full((N,), aw, jnp.float32)
+    r2, u = bx, aw * colsum_cw + K * bw
+    a = ax * bw * rowsum_cx
+    b = jnp.zeros((N,), jnp.float32)                           # free: bias slot
+
+    if use_kernels:
+        y = q8_matmul(cx, cw, rs, cs, r2, u, a, b, interpret=interpret)
+    else:
+        y = ref.q8_matmul_ref(cx, cw, rs, cs, r2, u, a, b)
+    return y, {"cx": cx, "cw": cw, "sx": sx, "sw": sw}
+
+
+def fused_quantize_psq(g: jax.Array, key: jax.Array, bits: int,
+                       interpret: bool = True):
+    """PSQ gradient quantize via the fused kernel; returns dequantized g
+    (simulate path) — used by benchmarks to measure kernel-vs-ref parity."""
+    M, N = g.shape
+    rbits = jax.random.bits(key, (M, N), jnp.uint32)
+    codes, scale, zero = quantize_sr_rows(g, rbits, bits, interpret=interpret)
+    off = (1 << bits) // 2
+    return (codes.astype(jnp.float32) + off) / scale + zero
+
+
+def fused_quantize_ptq(g: jax.Array, key: jax.Array, bits: int,
+                       interpret: bool = True):
+    M, N = g.shape
+    rbits = jax.random.bits(key, (M, N), jnp.uint32)
+    codes, scale, zero = quantize_sr_tensor(g, rbits, bits,
+                                            interpret=interpret)
+    off = (1 << bits) // 2
+    return (codes.astype(jnp.float32) + off) / scale + zero

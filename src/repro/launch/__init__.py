@@ -1,0 +1,9 @@
+"""Launchers: mesh construction, multi-pod dry-run, train and serve drivers.
+
+NOTE: import `dryrun` only as an entry point — it sets XLA_FLAGS at module
+import (512 placeholder devices) and must run in a fresh process.
+"""
+
+from .mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

@@ -1,0 +1,112 @@
+"""Roofline-term extraction from compiled AOT artifacts.
+
+Per (arch x shape x mesh) cell (assignment Sec. ROOFLINE ANALYSIS):
+
+  compute    = HLO_FLOPs_per_device  / peak_FLOP/s          (= F_g/(chips*peak))
+  memory     = HLO_bytes_per_device  / HBM_bw
+  collective = collective_bytes_per_device / link_bw
+
+``cost_analysis``/``as_text`` of an SPMD-partitioned executable describe the
+*per-device* program, so dividing by per-chip peaks is exactly the
+spec's  global/(chips x peak)  formula.
+
+collective_bytes is not in cost_analysis: we parse the optimized HLO and sum
+the operand bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+
+# TPU v5e-class hardware constants (assignment-provided)
+HW = {
+    "peak_bf16": 197e12,      # FLOP/s per chip
+    "peak_int8": 394e12,      # 2x bf16 on the MXU
+    "hbm_bw": 819e9,          # B/s per chip
+    "link_bw": 50e9,          # B/s per ICI link
+}
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "s32": 4, "s16": 2, "s8": 1, "u64": 8, "u32": 4, "u16": 2,
+    "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLL_OPS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+             "collective-permute")
+
+# result-type token(s): e.g. "f32[64,512]{1,0}" or "(s8[8,29], u32[2])"
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(type_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-device bytes moved by each collective family (+ op counts).
+
+    Sums the *result* type of each collective instruction (for all-reduce
+    result==operand size; for all-gather it is the gathered size — an upper
+    bound on wire bytes; for reduce-scatter the scattered output — a lower
+    bound; start/done pairs counted once via the `-start` form when present).
+    """
+    out = {k: 0 for k in _COLL_OPS}
+    counts = {k: 0 for k in _COLL_OPS}
+    seen_start = set()
+    for line in hlo_text.splitlines():
+        ls = line.strip()
+        m = re.match(r"%?([\w.\-]+)\s*=\s*(.*)", ls)
+        if not m:
+            continue
+        rhs = m.group(2)
+        for op in _COLL_OPS:
+            # match "<type> all-reduce(" or "all-reduce-start("
+            om = re.search(r"^(.*?)\s" + op + r"(-start)?\(", rhs)
+            if om:
+                if f" {op}-done(" in rhs:
+                    break
+                out[op] += _shape_bytes(om.group(1))
+                counts[op] += 1
+                break
+    out["total"] = sum(out[k] for k in _COLL_OPS)
+    out["counts"] = counts
+    return out
+
+
+def model_flops(n_params: int, n_tokens: int, kind: str,
+                active_frac: float = 1.0) -> float:
+    """The 6ND (train) / 2ND (forward) 'useful flops' yardstick.
+
+    n_params: total matmul-visible params; active_frac: MoE top-k/E scaling
+    on expert params folded in by the caller via `active params`."""
+    per_tok = 6.0 if kind == "train" else 2.0
+    return per_tok * n_params * active_frac * n_tokens
+
+
+def roofline_terms(flops: float, bytes_accessed: float,
+                   coll_bytes: int, int8: bool = True) -> dict:
+    peak = HW["peak_int8"] if int8 else HW["peak_bf16"]
+    t_c = flops / peak
+    t_m = bytes_accessed / HW["hbm_bw"]
+    t_n = coll_bytes / HW["link_bw"]
+    terms = {"compute_s": t_c, "memory_s": t_m, "collective_s": t_n,
+             "compute_s_bf16peak": flops / HW["peak_bf16"]}
+    dom = max(("compute_s", t_c), ("memory_s", t_m), ("collective_s", t_n),
+              key=lambda kv: kv[1])
+    terms["bottleneck"] = dom[0].replace("_s", "")
+    terms["step_time_lb_s"] = dom[1]
+    return terms

@@ -1,0 +1,14 @@
+"""Layer zoo — every GEMM routes through repro.core.fqt."""
+
+from .attention import (attention, cross_attention_kv, decode_attention,
+                        init_attention, init_kv_cache)
+from .common import dense, init_dense, qkey
+from .embeddings import (apply_mrope, apply_rope, embed, init_embedding,
+                         init_lm_head, lm_head, sinusoidal_positions)
+from .mamba2 import (init_mamba2_layer, init_mamba2_state, mamba2_decode_step,
+                     mamba2_layer)
+from .mlp import init_mlp, mlp
+from .moe import expert_capacity, init_moe, moe_block
+from .norms import apply_norm, init_norm
+from .rwkv import (init_rwkv_layer, init_rwkv_state, rwkv_decode_step,
+                   rwkv_layer)

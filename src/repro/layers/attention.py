@@ -1,0 +1,171 @@
+"""GQA attention with FQT projections, KV cache, and cross-attention.
+
+All four projections (Q, K, V, O) are FQT linear layers (the paper quantizes
+every linear GEMM); the attention math itself (scores/softmax/value-mix) is
+full-precision, exactly like the paper's transformer setting where only
+linear layers are quantized.
+
+KV caches are stored *flattened* as ``(B, S, n_kv*head_dim)`` so the tensor-
+parallel `model` axis always divides the sharded dim (DESIGN.md Sec. 4).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from .common import dense, init_dense, qkey
+from .embeddings import apply_mrope, apply_rope
+
+__all__ = ["init_attention", "attention", "decode_attention",
+           "init_kv_cache", "cross_attention_kv"]
+
+_NEG = -1e30
+
+
+def init_attention(key, cfg: ArchConfig) -> dict:
+    hd = cfg.hd
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": init_dense(ks[0], cfg.d_model, cfg.n_heads * hd, cfg.qkv_bias),
+        "wk": init_dense(ks[1], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wv": init_dense(ks[2], cfg.d_model, cfg.n_kv_heads * hd, cfg.qkv_bias),
+        "wo": init_dense(ks[3], cfg.n_heads * hd, cfg.d_model, False),
+    }
+
+
+def _qkv(p, x, key, policy, cfg, positions):
+    B, T, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = dense(p["wq"], x, key, policy, tag=1).reshape(B, T, H, hd)
+    k = dense(p["wk"], x, key, policy, tag=2).reshape(B, T, KV, hd)
+    v = dense(p["wv"], x, key, policy, tag=3).reshape(B, T, KV, hd)
+    if cfg.rope == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta)
+        k = apply_mrope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask):
+    """q: (B,T,KV,G,hd), k/v: (B,S,KV,hd), mask: broadcast (B,1,1,T,S)."""
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+    scores = jnp.einsum("btkgh,bskh->bkgts", q * scale, k)
+    scores = jnp.where(mask, scores, _NEG)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+    return out
+
+
+def _apply_attn_hint(q, k, v, sdpa_hint):
+    """Context-parallel constraint (ShardingPlan.attn_shardings): q sharded
+    over query-time on the model axis; k/v gathered.  Removes the score
+    all-reduce GSPMD otherwise emits when heads don't divide the TP axis."""
+    if sdpa_hint is None:
+        return q, k, v
+    hint = sdpa_hint(q.shape[0], q.shape[1], k.shape[1], q.shape[2],
+                     k.shape[2], q.shape[3])
+    if hint is None:
+        return q, k, v
+    q_sh, kv_sh = hint
+    q = jax.lax.with_sharding_constraint(q, q_sh)
+    k = jax.lax.with_sharding_constraint(k, kv_sh)
+    v = jax.lax.with_sharding_constraint(v, kv_sh)
+    return q, k, v
+
+
+def attention(p: dict, x: jax.Array, key, policy: QuantPolicy,
+              cfg: ArchConfig, positions: jax.Array,
+              causal: bool = True,
+              kv_override: Optional[tuple] = None,
+              return_kv: bool = False, sdpa_hint=None):
+    """Full-sequence attention (train / prefill / encoder).
+
+    kv_override: (k, v) of shape (B, S, KV, hd) — cross-attention.
+    return_kv: also return the (rotated) k, v for cache initialization.
+    """
+    B, T, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    if kv_override is not None:
+        q = dense(p["wq"], x, key, policy, tag=1).reshape(B, T, H, hd)
+        if cfg.rope == "standard":
+            q = apply_rope(q, positions, cfg.rope_theta)
+        elif cfg.rope == "mrope":
+            q = apply_mrope(q, positions, cfg.rope_theta)
+        k, v = kv_override
+    else:
+        q, k, v = _qkv(p, x, key, policy, cfg, positions)
+    q, k, v = _apply_attn_hint(q, k, v, sdpa_hint)
+    S = k.shape[1]
+    if causal:
+        mask = (jnp.arange(T)[:, None] >= jnp.arange(S)[None, :])
+        mask = mask[None, None, None]
+    else:
+        mask = jnp.ones((1, 1, 1, T, S), bool)
+    out = _sdpa(q.reshape(B, T, KV, G, hd), k, v, mask)
+    out = out.reshape(B, T, H * hd)
+    y = dense(p["wo"], out, key, policy, tag=4)
+    if return_kv:
+        return y, (k, v)
+    return y
+
+
+def cross_attention_kv(p: dict, enc_out: jax.Array, key,
+                       policy: QuantPolicy, cfg: ArchConfig):
+    """Precompute the encoder-side K/V for decoder cross-attention."""
+    B, S, _ = enc_out.shape
+    hd, KV = cfg.hd, cfg.n_kv_heads
+    k = dense(p["wk"], enc_out, key, policy, tag=2).reshape(B, S, KV, hd)
+    v = dense(p["wv"], enc_out, key, policy, tag=3).reshape(B, S, KV, hd)
+    return k, v
+
+
+# ---------------------------------------------------------------------------
+# Decode path (single new token, flattened KV cache)
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=jnp.float32) -> dict:
+    flat = cfg.n_kv_heads * cfg.hd
+    return {
+        "k": jnp.zeros((batch, max_seq, flat), dtype),
+        "v": jnp.zeros((batch, max_seq, flat), dtype),
+    }
+
+
+def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
+                     key, policy: QuantPolicy, cfg: ArchConfig):
+    """One-token attention step. x: (B, 1, d); index: scalar position.
+
+    Returns (y, new_cache). Attends over cache positions <= index.
+    """
+    B = x.shape[0]
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    positions = jnp.full((B, 1), index, jnp.int32)
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, 1))
+    q, k_new, v_new = _qkv(p, x, key, policy, cfg, positions)
+    flat = KV * hd
+    cache = {
+        "k": jax.lax.dynamic_update_slice(
+            cache["k"], k_new.reshape(B, 1, flat).astype(cache["k"].dtype),
+            (0, index, 0)),
+        "v": jax.lax.dynamic_update_slice(
+            cache["v"], v_new.reshape(B, 1, flat).astype(cache["v"].dtype),
+            (0, index, 0)),
+    }
+    S = cache["k"].shape[1]
+    k = cache["k"].reshape(B, S, KV, hd).astype(x.dtype)
+    v = cache["v"].reshape(B, S, KV, hd).astype(x.dtype)
+    mask = (jnp.arange(S) <= index)[None, None, None, None, :]  # (1,1,1,1,S)
+    out = _sdpa(q.reshape(B, 1, KV, G, hd), k, v, mask)
+    y = dense(p["wo"], out.reshape(B, 1, H * hd), key, policy, tag=4)
+    return y, cache

@@ -1,0 +1,42 @@
+"""Shared layer utilities: key derivation, initializers, dense wrapper."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core import QuantPolicy, fqt_matmul
+
+__all__ = ["qkey", "init_dense", "dense", "he_init", "lecun_init"]
+
+
+def qkey(key: jax.Array, tag: int) -> jax.Array:
+    """Stable per-call-site PRNG key for backward-pass quantizers."""
+    return jax.random.fold_in(key, tag)
+
+
+def lecun_init(key, shape, in_axis_size=None):
+    fan_in = in_axis_size or shape[0]
+    return jax.random.normal(key, shape) * (1.0 / jnp.sqrt(fan_in))
+
+
+def he_init(key, shape, in_axis_size=None):
+    fan_in = in_axis_size or shape[0]
+    return jax.random.normal(key, shape) * jnp.sqrt(2.0 / fan_in)
+
+
+def init_dense(key, d_in: int, d_out: int, bias: bool = False,
+               scale: float = 1.0) -> dict:
+    p = {"w": lecun_init(key, (d_in, d_out)) * scale}
+    if bias:
+        p["b"] = jnp.zeros((d_out,))
+    return p
+
+
+def dense(p: dict, x: jax.Array, key: jax.Array, policy: QuantPolicy,
+          tag: int = 0) -> jax.Array:
+    """FQT linear layer: the paper's quantized GEMM + fp bias add."""
+    y = fqt_matmul(x, p["w"], qkey(key, tag), policy)
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y

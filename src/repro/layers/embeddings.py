@@ -1,0 +1,93 @@
+"""Token embeddings (Megatron-style padded vocab) and rotary embeddings
+(standard RoPE + Qwen2-VL M-RoPE sectioned variant).
+
+The embedding gather and the rotary elementwise math stay full-precision;
+the LM head is a linear layer and therefore FQT-quantized.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy, fqt_matmul
+from .common import qkey
+
+__all__ = ["init_embedding", "embed", "init_lm_head", "lm_head",
+           "rope_freqs", "apply_rope", "apply_mrope", "sinusoidal_positions"]
+
+
+def init_embedding(key, cfg: ArchConfig) -> dict:
+    # padded vocab (DESIGN.md Sec. 4): pad rows never receive gradient
+    # because token ids < vocab_size; the LM-head loss masks pad logits.
+    return {"table": jax.random.normal(key, (cfg.padded_vocab, cfg.d_model))
+            * 0.02}
+
+
+def embed(p: dict, tokens: jax.Array) -> jax.Array:
+    return p["table"][tokens]
+
+
+def init_lm_head(key, cfg: ArchConfig) -> dict:
+    return {"w": jax.random.normal(key, (cfg.d_model, cfg.padded_vocab))
+            * (1.0 / jnp.sqrt(cfg.d_model))}
+
+
+def lm_head(p: dict, x: jax.Array, key, policy: QuantPolicy) -> jax.Array:
+    """Final projection — a linear layer, so quantized like every other."""
+    return fqt_matmul(x, p["w"], qkey(key, 0x1ead), policy)
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10_000.0) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2) / head_dim))
+
+
+def _rotate(x, cos, sin):
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, T, H, hd); positions: (B, T) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                     # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs     # (B, T, hd/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions: jax.Array, theta: float,
+                sections=(16, 24, 24)) -> jax.Array:
+    """Qwen2-VL multimodal RoPE: positions (3, B, T) for (t, h, w) axes,
+    rotary dims split into per-axis sections (over hd/2 frequency slots)."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                              # (hd/2,)
+    n = hd // 2
+    # section boundaries scaled to this head_dim
+    total = sum(sections)
+    bounds, acc = [], 0
+    for s in sections[:-1]:
+        acc += round(n * s / total)
+        bounds.append(acc)
+    sec_id = jnp.zeros((n,), jnp.int32)
+    for b in bounds:
+        sec_id = sec_id + (jnp.arange(n) >= b)
+    pos_sel = positions[sec_id]                                # (n, B, T)
+    ang = jnp.moveaxis(pos_sel, 0, -1).astype(jnp.float32) * freqs
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    return _rotate(x, cos, sin).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> jax.Array:
+    """Whisper encoder fixed sinusoidal positions."""
+    pos = jnp.arange(seq)[:, None]
+    dim = jnp.arange(0, d, 2)[None, :]
+    ang = pos / (10_000.0 ** (dim / d))
+    out = jnp.zeros((seq, d))
+    out = out.at[:, 0::2].set(jnp.sin(ang))
+    out = out.at[:, 1::2].set(jnp.cos(ang))
+    return out

@@ -1,0 +1,207 @@
+"""Mamba-2 (SSD) mixer block [arXiv:2405.21060], used by Zamba2.
+
+Training/prefill uses the *chunked SSD* formulation — the block-matmul
+restatement of the selective-state recurrence that maps onto the MXU
+(this is the TPU-native adaptation; a step-by-step scan would waste the
+systolic array).  Decode uses the exact O(1) recurrence.
+
+Tensor-parallel layout (DESIGN.md Sec. 4): projections are SPLIT
+(z / x / BC / dt) rather than fused so each output shards cleanly on the
+`model` axis — heads (H = expand*d/headdim) divide the 16-way axis for the
+full config, making the SSD head-parallel; B/C (ngroups=1) are replicated.
+
+FQT applies to all projections (the large GEMMs); the SSD state contractions
+act on tiny (headdim x d_state) blocks interleaved with data-dependent decays
+and stay full precision (DESIGN.md Sec. 5).
+
+State per layer: ``h``      (B, H, hd, N)        SSM state,
+                 ``conv_x`` (B, k-1, d_inner)    causal-conv tail (sharded),
+                 ``conv_bc``(B, k-1, 2N)         causal-conv tail (replicated).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from .common import dense, init_dense
+
+__all__ = ["init_mamba2_layer", "mamba2_layer", "mamba2_decode_step",
+           "init_mamba2_state"]
+
+_CHUNK = 128
+
+
+def _dims(cfg: ArchConfig):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    H = d_inner // cfg.ssm_headdim
+    return d_inner, H
+
+
+def init_mamba2_layer(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    d_inner, H = _dims(cfg)
+    N = cfg.ssm_state
+    ks = jax.random.split(key, 8)
+    return {
+        "norm": {"g": jnp.ones((d,))},
+        "z_proj": init_dense(ks[0], d, d_inner),
+        "x_proj": init_dense(ks[1], d, d_inner),
+        "bc_proj": init_dense(ks[2], d, 2 * N),
+        "dt_proj": init_dense(ks[3], d, H),
+        "conv_x_w": jax.random.normal(ks[4], (cfg.ssm_conv, d_inner)) * 0.2,
+        "conv_x_b": jnp.zeros((d_inner,)),
+        "conv_bc_w": jax.random.normal(ks[5], (cfg.ssm_conv, 2 * N)) * 0.2,
+        "conv_bc_b": jnp.zeros((2 * N,)),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, H)),
+        "D": jnp.ones((H,)),
+        "dt_bias": jnp.log(jnp.expm1(jnp.linspace(1e-3, 0.1, H))),
+        "out_norm": {"g": jnp.ones((d_inner,))},
+        "out_proj": init_dense(ks[6], d_inner, d),
+    }
+
+
+def init_mamba2_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d_inner, H = _dims(cfg)
+    # SSM state accumulates in f32; conv tails live in the stream dtype
+    return {"h": jnp.zeros((batch, H, cfg.ssm_headdim, cfg.ssm_state),
+                           jnp.float32),
+            "conv_x": jnp.zeros((batch, cfg.ssm_conv - 1, d_inner), dtype),
+            "conv_bc": jnp.zeros((batch, cfg.ssm_conv - 1, 2 * cfg.ssm_state),
+                                 dtype)}
+
+
+def _rms(p, x):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), -1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + 1e-5) * p["g"]).astype(x.dtype)
+
+
+def _causal_conv(w, b, x, tail, act=True):
+    """Depthwise causal conv. x: (B, T, C); tail: (B, k-1, C).
+
+    Returns (y, new_tail)."""
+    k = w.shape[0]
+    xp = jnp.concatenate([tail, x], axis=1)                      # (B, T+k-1, C)
+    y = sum(w[j].astype(x.dtype) * jax.lax.dynamic_slice_in_dim(
+            xp, j, x.shape[1], 1) for j in range(k))
+    y = y + b.astype(x.dtype)
+    return (jax.nn.silu(y) if act else y), xp[:, -(k - 1):]
+
+
+def _segsum(a):
+    """Cumulative log-decay lower-triangular matrix: L[i,j] = sum_{j<k<=i} a_k."""
+    T = a.shape[-1]
+    cs = jnp.cumsum(a, axis=-1)
+    L = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((T, T), bool))
+    return jnp.where(mask, L, -jnp.inf)
+
+
+def _ssd_chunked(x, dt, A_log, Bm, Cm, h0):
+    """Chunked SSD. x: (B,T,H,P); dt: (B,T,H); A_log: (H,);
+    Bm/Cm: (B,T,N) (ngroups=1, shared across heads); h0: (B,H,P,N).
+
+    Returns (y (B,T,H,P), h_final)."""
+    Bsz, T, H, P = x.shape
+    N = Bm.shape[-1]
+    cl = min(_CHUNK, T)
+    nc = T // cl
+    a = dt * (-jnp.exp(A_log))                                   # (B,T,H) log-decay
+    xd = x * dt[..., None]
+    r = lambda t, s: t.reshape(Bsz, nc, cl, *s)
+    ac = r(a, (H,)).transpose(0, 1, 3, 2)                        # (B,nc,H,cl)
+    xc = r(xd, (H, P))
+    Bc = r(Bm, (N,))
+    Cc = r(Cm, (N,))
+
+    # 1) intra-chunk (diagonal block): Y = (C Bᵀ ⊙ L) X
+    L = jnp.exp(_segsum(ac))                                     # (B,nc,H,cl,cl)
+    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)               # (B,nc,cl,cl)
+    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", L, scores, xc)
+
+    # 2) chunk-final states: S_c = sum_s decay_to_end * B_s x_s
+    a_cum = jnp.cumsum(ac, axis=-1)                              # (B,nc,H,cl)
+    decay_end = jnp.exp(a_cum[..., -1:] - a_cum)
+    S = jnp.einsum("bchs,bcsn,bcshp->bchpn", decay_end, Bc, xc)
+
+    # 3) inter-chunk recurrence (tiny scan, T/128 steps)
+    chunk_decay = jnp.exp(a_cum[..., -1])                        # (B,nc,H)
+    def step(h, inp):
+        S_c, dec_c = inp
+        return h * dec_c[..., None, None] + S_c, h               # emit pre-chunk state
+    h_fin, h_prevs = jax.lax.scan(
+        step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                        # (B,nc,H,P,N)
+
+    # 4) inter-chunk contribution: y += C_t * decay_in * h_prev
+    decay_in = jnp.exp(a_cum)
+    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, decay_in, h_prevs)
+
+    y = (y_diag + y_off).reshape(Bsz, T, H, P)
+    return y, h_fin
+
+
+def _project(p, x, key, policy, cfg, tag):
+    d_inner, H = _dims(cfg)
+    z = dense(p["z_proj"], x, key, policy, tag + 1)
+    xs = dense(p["x_proj"], x, key, policy, tag + 2)
+    bc = dense(p["bc_proj"], x, key, policy, tag + 3)
+    dt_raw = dense(p["dt_proj"], x, key, policy, tag + 4)
+    return z, xs, bc, dt_raw
+
+
+def mamba2_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
+                 state: dict | None = None, tag: int = 0x50):
+    """Full-sequence Mamba2 block (train/prefill). Returns (h, final_state)."""
+    B, T, d = h.shape
+    d_inner, H = _dims(cfg)
+    P, N = cfg.ssm_headdim, cfg.ssm_state
+    res = h
+    x = _rms(p["norm"], h)
+    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag)
+    if state is None:
+        state = init_mamba2_state(cfg, B, h.dtype)
+    xs, conv_x_tail = _causal_conv(p["conv_x_w"], p["conv_x_b"], xs,
+                                   state["conv_x"])
+    bc, conv_bc_tail = _causal_conv(p["conv_bc_w"], p["conv_bc_b"], bc,
+                                    state["conv_bc"])
+    xs = xs.reshape(B, T, H, P).astype(jnp.float32)
+    Bm, Cm = bc[..., :N].astype(jnp.float32), bc[..., N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # (B,T,H)
+    y, h_fin = _ssd_chunked(xs, dt, p["A_log"], Bm, Cm, state["h"])
+    y = y + p["D"][None, None, :, None] * xs
+    y = y.reshape(B, T, d_inner).astype(z.dtype)
+    y = _rms(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, key, policy, tag + 5)
+    new_state = {"h": h_fin, "conv_x": conv_x_tail, "conv_bc": conv_bc_tail}
+    return res + out, new_state
+
+
+def mamba2_decode_step(p, h, state: dict, key, policy: QuantPolicy,
+                       cfg: ArchConfig, tag: int = 0x50):
+    """Exact O(1) recurrence for one token. h: (B, 1, d)."""
+    B, _, d = h.shape
+    d_inner, H = _dims(cfg)
+    P, N = cfg.ssm_headdim, cfg.ssm_state
+    res = h
+    x = _rms(p["norm"], h)
+    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag)
+    xs, conv_x_tail = _causal_conv(p["conv_x_w"], p["conv_x_b"], xs,
+                                   state["conv_x"])
+    bc, conv_bc_tail = _causal_conv(p["conv_bc_w"], p["conv_bc_b"], bc,
+                                    state["conv_bc"])
+    xs = xs[:, 0].reshape(B, H, P).astype(jnp.float32)
+    Bm = bc[:, 0, :N].astype(jnp.float32)
+    Cm = bc[:, 0, N:].astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
+    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))
+    hs = state["h"] * a[..., None, None] + jnp.einsum(
+        "bh,bhp,bn->bhpn", dt, xs, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", hs, Cm) + p["D"][None, :, None] * xs
+    y = y.reshape(B, 1, d_inner).astype(z.dtype)
+    y = _rms(p["out_norm"], y * jax.nn.silu(z))
+    out = dense(p["out_proj"], y, key, policy, tag + 5)
+    return res + out, {"h": hs, "conv_x": conv_x_tail, "conv_bc": conv_bc_tail}

@@ -1,0 +1,39 @@
+"""Feed-forward blocks: SwiGLU / GELU / squared-ReLU, all FQT GEMMs."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from .common import dense, init_dense
+
+__all__ = ["init_mlp", "mlp"]
+
+
+def init_mlp(key, d_model: int, d_ff: int, act: str) -> dict:
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"gate": init_dense(ks[0], d_model, d_ff),
+                "up": init_dense(ks[1], d_model, d_ff),
+                "down": init_dense(ks[2], d_ff, d_model)}
+    return {"fc1": init_dense(ks[0], d_model, d_ff),
+            "fc2": init_dense(ks[1], d_ff, d_model)}
+
+
+def mlp(p: dict, x: jax.Array, key, policy: QuantPolicy, act: str,
+        tag_base: int = 0x10) -> jax.Array:
+    if act == "swiglu":
+        g = dense(p["gate"], x, key, policy, tag_base + 1)
+        u = dense(p["up"], x, key, policy, tag_base + 2)
+        h = jax.nn.silu(g) * u
+        return dense(p["down"], h, key, policy, tag_base + 3)
+    h = dense(p["fc1"], x, key, policy, tag_base + 1)
+    if act == "gelu":
+        h = jax.nn.gelu(h)
+    elif act == "relu2":
+        h = jnp.square(jax.nn.relu(h))
+    else:
+        raise ValueError(f"unknown act {act}")
+    return dense(p["fc2"], h, key, policy, tag_base + 2)

@@ -1,0 +1,98 @@
+"""Top-k MoE with expert parallelism and capacity-based static dispatch.
+
+Experts shard over the `model` mesh axis (DESIGN.md Sec. 4).  Dispatch uses
+the classic capacity scheme (GShard-style) realized with scatter/gather so
+every shape is static under jit; per-expert FFN GEMMs are vmapped FQT
+matmuls — PSQ/BHQ rows inside an expert are the tokens routed to it, which is
+exactly the sparse-outlier regime the paper's quantizers exploit
+(DESIGN.md Sec. 5).
+
+Returns an auxiliary load-balancing loss (Switch-style) alongside the output.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from .common import dense, init_dense, qkey
+from .mlp import init_mlp, mlp
+
+__all__ = ["init_moe", "moe_block", "expert_capacity"]
+
+
+def expert_capacity(n_tokens: int, cfg: ArchConfig) -> int:
+    c = int(cfg.moe_topk * n_tokens / cfg.moe_experts * cfg.moe_capacity)
+    return max(c, 1)
+
+
+def init_moe(key, cfg: ArchConfig) -> dict:
+    kr, ke = jax.random.split(key)
+    expert_keys = jax.random.split(ke, cfg.moe_experts)
+    experts = jax.vmap(
+        lambda k: init_mlp(k, cfg.d_model, cfg.d_ff, cfg.act))(expert_keys)
+    return {"router": init_dense(kr, cfg.d_model, cfg.moe_experts),
+            "experts": experts}
+
+
+def moe_block(p: dict, x: jax.Array, key, policy: QuantPolicy,
+              cfg: ArchConfig, tag_base: int = 0x20, moe_hint=None):
+    """x: (B, T, d) -> (y, aux_loss).
+
+    moe_hint(E, C) -> optional NamedSharding for the (E, C, d) dispatch
+    buffer (ShardingPlan.moe_dispatch_sharding): shards experts over the TP
+    axis and capacity over the data axes (the canonical MoE all-to-all)."""
+    B, T, d = x.shape
+    N = B * T
+    E, K = cfg.moe_experts, cfg.moe_topk
+    C = expert_capacity(N, cfg)
+    xt = x.reshape(N, d)
+
+    logits = dense(p["router"], xt, key, policy, tag_base)          # (N, E)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, K)                          # (N, K)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
+
+    # --- capacity assignment (static shapes) -----------------------------
+    flat_e = top_i.reshape(-1)                                      # (N*K,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)             # (N*K, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              flat_e[:, None], axis=1)[:, 0]        # (N*K,)
+    keep = (pos < C)
+    dst = jnp.where(keep, flat_e * C + pos, E * C)                  # overflow slot
+
+    # --- dispatch: scatter tokens into (E, C, d) --------------------------
+    xr = jnp.repeat(xt, K, axis=0)                                  # (N*K, d)
+    buf = jnp.zeros((E * C + 1, d), xt.dtype).at[dst].add(
+        xr * keep[:, None].astype(xt.dtype))
+    xe = buf[:-1].reshape(E, C, d)
+    if moe_hint is not None:
+        sh = moe_hint(E, C)
+        if sh is not None:
+            xe = jax.lax.with_sharding_constraint(xe, sh)
+
+    # --- expert FFN (vmapped FQT GEMMs, per-expert quantizer stats) -------
+    ekeys = jax.random.split(qkey(key, tag_base + 1), E)
+    ye = jax.vmap(lambda ep, ex, ek: mlp(ep, ex, ek, policy, cfg.act,
+                                         tag_base + 2))(
+        p["experts"], xe, ekeys)                                    # (E, C, d)
+    if moe_hint is not None:
+        sh = moe_hint(E, C)
+        if sh is not None:
+            ye = jax.lax.with_sharding_constraint(ye, sh)
+
+    # --- combine -----------------------------------------------------------
+    out_slots = jnp.concatenate([ye.reshape(E * C, d),
+                                 jnp.zeros((1, d), ye.dtype)])[dst]
+    w = (top_p.reshape(-1) * keep.astype(jnp.float32))[:, None]
+    y = jnp.sum((out_slots.astype(jnp.float32) * w).reshape(N, K, d),
+                axis=1).reshape(B, T, d).astype(x.dtype)
+
+    # Switch-style load-balance aux loss
+    frac_tokens = jnp.mean(jax.nn.one_hot(top_i[:, 0], E, dtype=jnp.float32),
+                           axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    aux = E * jnp.sum(frac_tokens * frac_probs)
+    return y, aux

@@ -1,0 +1,36 @@
+"""Normalization layers (kept in full precision, per the paper's transformer
+setting: only linear-layer GEMMs are quantized)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["init_norm", "apply_norm", "rmsnorm", "layernorm"]
+
+_EPS = 1e-5
+
+
+def init_norm(d: int, kind: str = "rmsnorm") -> dict:
+    p = {"g": jnp.ones((d,))}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,))
+    return p
+
+
+def rmsnorm(p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)                    # f32 stats, stream dtype out
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + _EPS) * p["g"]).astype(x.dtype)
+
+
+def layernorm(p: dict, x: jax.Array) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + _EPS) * p["g"] + p.get("b", 0.0)
+    return out.astype(x.dtype)
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str) -> jax.Array:
+    return layernorm(p, x) if kind == "layernorm" else rmsnorm(p, x)

@@ -1,0 +1,193 @@
+"""RWKV-6 "Finch" block: data-dependent-decay linear attention
+[arXiv:2404.05892], attention-free.
+
+Structure per layer: time-mix (the WKV linear recurrence) + channel-mix.
+All dense projections (R/K/V/G/O and channel-mix) are FQT GEMMs; the WKV
+recurrence itself is elementwise/outer-product state math with no GEMM, so it
+stays full precision (DESIGN.md Sec. 5 arch-applicability).
+
+State per layer: ``s``  (B, H, hd, hd) WKV state, ``x_tm``/``x_cm`` (B, d)
+previous-token shift registers — O(1) decode memory, which is why this arch
+runs the long_500k cell.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from .common import dense, init_dense, qkey
+
+__all__ = ["init_rwkv_layer", "rwkv_layer", "rwkv_decode_step",
+           "init_rwkv_state"]
+
+_MIX = ("w", "k", "v", "r", "g")
+_LORA_MIX = 32
+_LORA_DECAY = 64
+
+
+def init_rwkv_layer(key, cfg: ArchConfig) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm_headdim
+    H = d // hd
+    ks = jax.random.split(key, 16)
+    ramp = jnp.arange(d) / d
+    p = {
+        "ln1": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        "ln2": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        # ddlerp token-shift mixing (paper's low-rank data-dependent mix)
+        "mu_x": ramp * 0.5,
+        "mu": jnp.stack([ramp * 0.5 + 0.1 * i for i in range(5)]),   # (5, d)
+        "tm_w1": jax.random.normal(ks[0], (d, 5 * _LORA_MIX)) * 1e-2,
+        "tm_w2": jax.random.normal(ks[1], (5, _LORA_MIX, d)) * 1e-2,
+        # data-dependent decay
+        "w0": -6.0 + 5.0 * ramp,
+        "dec_w1": jax.random.normal(ks[2], (d, _LORA_DECAY)) * 1e-2,
+        "dec_w2": jax.random.normal(ks[3], (_LORA_DECAY, d)) * 1e-2,
+        "u": jax.random.normal(ks[4], (H, hd)) * 0.1,                # bonus
+        "wr": init_dense(ks[5], d, d),
+        "wk": init_dense(ks[6], d, d),
+        "wv": init_dense(ks[7], d, d),
+        "wg": init_dense(ks[8], d, d),
+        "wo": init_dense(ks[9], d, d),
+        "ln_x": {"g": jnp.ones((d,)), "b": jnp.zeros((d,))},
+        # channel mix
+        "cm_mu_k": ramp * 0.5,
+        "cm_mu_r": ramp * 0.5,
+        "cm_wk": init_dense(ks[10], d, cfg.d_ff),
+        "cm_wv": init_dense(ks[11], cfg.d_ff, d),
+        "cm_wr": init_dense(ks[12], d, d),
+    }
+    return p
+
+
+def init_rwkv_state(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    hd = cfg.ssm_headdim
+    H = d // hd
+    # WKV state accumulates in f32 regardless of the activation stream dtype
+    return {"s": jnp.zeros((batch, H, hd, hd), jnp.float32),
+            "x_tm": jnp.zeros((batch, d), dtype),
+            "x_cm": jnp.zeros((batch, d), dtype)}
+
+
+def _ln(p, x):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, -1, keepdims=True)
+    var = jnp.var(xf, -1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + 1e-5) * p["g"] + p["b"]
+    return out.astype(x.dtype)
+
+
+def _head_groupnorm(p, y, H):
+    """GroupNorm(H) over the head dim, RWKV's ln_x (f32 stats)."""
+    B, T, d = y.shape
+    yh = y.reshape(B, T, H, d // H).astype(jnp.float32)
+    mu = jnp.mean(yh, -1, keepdims=True)
+    var = jnp.var(yh, -1, keepdims=True)
+    yh = (yh - mu) * jax.lax.rsqrt(var + 1e-5)
+    return yh.reshape(B, T, d) * p["g"] + p["b"]
+
+
+def _time_mix_inputs(p, x, x_prev):
+    """ddlerp: five data-dependently mixed views of (x, x_prev)."""
+    sx = x_prev - x
+    xxx = x + sx * p["mu_x"]
+    a = jnp.tanh(xxx @ p["tm_w1"])                              # (..., 5*r)
+    a = a.reshape(*a.shape[:-1], 5, _LORA_MIX)
+    delta = jnp.einsum("...fr,frd->...fd", a, p["tm_w2"])       # (..., 5, d)
+    return [(x + sx * (p["mu"][i] + delta[..., i, :])).astype(x.dtype)
+            for i in range(len(_MIX))]  # [xw, xk, xv, xr, xg]
+
+
+def _decay(p, xw):
+    return jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(xw @ p["dec_w1"]) @ p["dec_w2"]))
+
+
+def _wkv_scan(r, k, v, w, u, s0):
+    """The RWKV-6 recurrence over time.
+
+    r,k,v,w: (B, T, H, hd); u: (H, hd); s0: (B, H, hd, hd).
+    y_t = r_t (S_{t-1} + diag(u) k_tT v_t);  S_t = diag(w_t) S_{t-1} + k_tT v_t.
+    """
+    def step(s, inp):
+        rt, kt, vt, wt = inp                                    # (B, H, hd)
+        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+        s = wt[..., None] * s + kv
+        return s, y
+    xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
+    s, ys = jax.lax.scan(step, s0, xs)
+    return jnp.moveaxis(ys, 0, 1), s                            # (B,T,H,hd), state
+
+
+def _time_mix(p, x, x_prev, s0, key, policy, cfg, tag=0x30):
+    B = x.shape[0]
+    d = cfg.d_model
+    hd = cfg.ssm_headdim
+    H = d // hd
+    xw, xk, xv, xr, xg = _time_mix_inputs(p, x, x_prev)
+    r = dense(p["wr"], xr, key, policy, tag + 1)
+    k = dense(p["wk"], xk, key, policy, tag + 2)
+    v = dense(p["wv"], xv, key, policy, tag + 3)
+    g = jax.nn.silu(dense(p["wg"], xg, key, policy, tag + 4))
+    w = _decay(p, xw)
+    T = x.shape[1]
+    rs, ks_, vs, ws = (t.reshape(B, T, H, hd).astype(jnp.float32)
+                       for t in (r, k, v, w))
+    y, s = _wkv_scan(rs, ks_, vs, ws, p["u"], s0)
+    y = _head_groupnorm(p["ln_x"], y.reshape(B, T, d), H).astype(x.dtype)
+    out = dense(p["wo"], y * g, key, policy, tag + 5)
+    return out, s
+
+
+def _channel_mix(p, x, x_prev, key, policy, tag=0x40):
+    sx = x_prev - x
+    xk = x + sx * p["cm_mu_k"]
+    xr = x + sx * p["cm_mu_r"]
+    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk, key, policy, tag + 1)))
+    kv = dense(p["cm_wv"], k, key, policy, tag + 2)
+    return jax.nn.sigmoid(dense(p["cm_wr"], xr, key, policy, tag + 3)) * kv
+
+
+def _shift(x):
+    """Token shift: x_{t-1} with zeros at t=0. x: (B, T, d)."""
+    return jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+
+
+def rwkv_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
+               state: dict | None = None):
+    """Full-sequence RWKV-6 layer (train/prefill). Returns (h, final_state)."""
+    B = h.shape[0]
+    s0 = (state["s"] if state is not None
+          else init_rwkv_state(cfg, B, h.dtype)["s"])
+    x1 = _ln(p["ln1"], h)
+    x1_prev = _shift(x1)
+    if state is not None:
+        x1_prev = x1_prev.at[:, 0].set(state["x_tm"])
+    att, s = _time_mix(p, x1, x1_prev, s0, key, policy, cfg)
+    h = h + att.astype(h.dtype)
+    x2 = _ln(p["ln2"], h)
+    x2_prev = _shift(x2)
+    if state is not None:
+        x2_prev = x2_prev.at[:, 0].set(state["x_cm"])
+    h = h + _channel_mix(p, x2, x2_prev, key, policy).astype(h.dtype)
+    new_state = {"s": s, "x_tm": x1[:, -1], "x_cm": x2[:, -1]}
+    return h, new_state
+
+
+def rwkv_decode_step(p, h, state: dict, key, policy: QuantPolicy,
+                     cfg: ArchConfig):
+    """One-token step. h: (B, 1, d). O(1) in sequence length."""
+    B = h.shape[0]
+    x1 = _ln(p["ln1"], h)
+    att, s = _time_mix(p, x1, state["x_tm"][:, None], state["s"],
+                       key, policy, cfg)
+    h = h + att.astype(h.dtype)
+    x2 = _ln(p["ln2"], h)
+    h = h + _channel_mix(p, x2, state["x_cm"][:, None],
+                         key, policy).astype(h.dtype)
+    new_state = {"s": s, "x_tm": x1[:, 0], "x_cm": x2[:, 0]}
+    return h, new_state

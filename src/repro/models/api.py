@@ -1,0 +1,105 @@
+"""Unified model API: ``build_model(cfg)`` -> :class:`Model`.
+
+Bundles init / loss / prefill / decode plus ``input_specs`` — the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against (no device
+allocation; DESIGN.md Sec. 4, assignment step 2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import SHAPES, ArchConfig, ShapeSpec
+from ..core import QuantPolicy
+from . import encdec, lm
+
+__all__ = ["Model", "build_model"]
+
+f32, i32 = jnp.float32, jnp.int32
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    init: Callable                    # key -> params
+    loss: Callable                    # (params, batch, key, policy) -> (loss, metrics)
+    prefill: Callable                 # (params, batch, policy, max_seq) -> (logits, cache)
+    decode: Callable                  # (params, cache, batch, policy) -> (logits, cache)
+    init_cache: Callable              # (batch, max_seq, dtype) -> cache
+
+    # ------------------------------------------------------------------
+    def input_specs(self, shape: ShapeSpec, dtype=jnp.float32) -> Dict[str, Any]:
+        """Abstract inputs for one (arch x shape) dry-run cell.
+
+        train  -> kwargs for ``loss``;   prefill -> kwargs for ``prefill``;
+        decode -> kwargs for ``decode`` (cache included).
+        """
+        cfg = self.cfg
+        B, T = shape.global_batch, shape.seq_len
+        sd = jax.ShapeDtypeStruct
+
+        def tok(b, t):
+            return sd((b, t), i32)
+
+        if shape.kind == "train":
+            batch = {"labels": tok(B, T)}
+            if cfg.family == "vlm":
+                batch["embeds"] = sd((B, T, cfg.d_model), dtype)
+                batch["positions"] = sd((3, B, T), i32)
+            elif cfg.family == "audio":
+                batch["frames"] = sd((B, cfg.enc_seq, cfg.d_model), dtype)
+                batch["tokens"] = tok(B, T)
+            else:
+                batch["tokens"] = tok(B, T)
+            return {"batch": batch}
+
+        if shape.kind == "prefill":
+            batch = {}
+            if cfg.family == "vlm":
+                batch["embeds"] = sd((B, T, cfg.d_model), dtype)
+                batch["positions"] = sd((3, B, T), i32)
+            elif cfg.family == "audio":
+                batch["frames"] = sd((B, cfg.enc_seq, cfg.d_model), dtype)
+                batch["tokens"] = tok(B, T)
+            else:
+                batch["tokens"] = tok(B, T)
+            return {"batch": batch}
+
+        # decode: one new token against a cache of length T
+        cache = jax.eval_shape(lambda: self.init_cache(cfg, B, T, dtype))
+        batch = {}
+        if cfg.family == "vlm":
+            batch["embeds"] = sd((B, 1, cfg.d_model), dtype)
+        else:
+            batch["tokens"] = tok(B, 1)
+        return {"cache": cache, "batch": batch}
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    if cfg.family == "audio":
+        return Model(
+            cfg=cfg,
+            init=lambda key: encdec.init_encdec_params(key, cfg),
+            loss=lambda params, batch, key, policy, **kw: encdec.encdec_loss(
+                params, batch, key, policy, cfg, **kw),
+            prefill=lambda params, batch, policy, max_seq=None, **kw: encdec.encdec_prefill(
+                params, batch, policy, cfg, max_seq, **kw),
+            decode=lambda params, cache, batch, policy, **kw: encdec.encdec_decode(
+                params, cache, batch, policy, cfg, **kw),
+            init_cache=encdec.init_encdec_cache,
+        )
+    return Model(
+        cfg=cfg,
+        init=lambda key: lm.init_lm_params(key, cfg),
+        loss=lambda params, batch, key, policy, **kw: lm.lm_loss(
+            params, batch, key, policy, cfg, **kw),
+        prefill=lambda params, batch, policy, max_seq=None, **kw: lm.lm_prefill(
+            params, batch, policy, cfg, max_seq, **kw),
+        decode=lambda params, cache, batch, policy, **kw: lm.lm_decode(
+            params, cache, batch, policy, cfg, **kw),
+        init_cache=lm.init_lm_cache,
+    )

@@ -1,0 +1,200 @@
+"""Whisper-style encoder-decoder backbone [arXiv:2212.04356].
+
+Per the assignment, the conv/audio frontend is a STUB: ``input_specs``
+supplies precomputed frame embeddings (B, enc_seq, d).  The transformer
+backbone (bidirectional encoder; decoder with causal self-attn + cross-attn)
+is fully implemented with FQT GEMMs.  Shapes index the *decoder* sequence
+(DESIGN.md Sec. 5); the real Whisper decoder caps at 448 positions — we extend
+the learned position table mechanically to cover the assigned shapes.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from ..layers import (apply_norm, attention, cross_attention_kv,
+                      decode_attention, embed, init_attention, init_embedding,
+                      init_kv_cache, init_lm_head, init_mlp, init_norm,
+                      lm_head, mlp, sinusoidal_positions)
+from .lm import chunked_head_loss, cross_entropy, scan_or_loop
+
+__all__ = ["init_encdec_params", "encdec_loss", "encdec_prefill",
+           "encdec_decode", "init_encdec_cache", "MAX_DECODER_POS"]
+
+MAX_DECODER_POS = 32_768
+
+
+def _init_enc_layer(key, cfg):
+    ka, km = jax.random.split(key)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "attn": init_attention(ka, cfg),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def _init_dec_layer(key, cfg):
+    ka, kx, km = jax.random.split(key, 3)
+    return {"ln1": init_norm(cfg.d_model, cfg.norm),
+            "self_attn": init_attention(ka, cfg),
+            "ln_x": init_norm(cfg.d_model, cfg.norm),
+            "cross_attn": init_attention(kx, cfg),
+            "ln2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act)}
+
+
+def init_encdec_params(key, cfg: ArchConfig) -> dict:
+    ke, kd, kt, kh, kp = jax.random.split(key, 5)
+    enc_keys = jax.random.split(ke, cfg.enc_layers)
+    dec_keys = jax.random.split(kd, cfg.n_layers)
+    return {
+        "enc_layers": jax.vmap(lambda k: _init_enc_layer(k, cfg))(enc_keys),
+        "enc_norm": init_norm(cfg.d_model, cfg.norm),
+        "embed": init_embedding(kt, cfg),
+        "pos_embed": jax.random.normal(kp, (MAX_DECODER_POS, cfg.d_model)) * 0.01,
+        "dec_layers": jax.vmap(lambda k: _init_dec_layer(k, cfg))(dec_keys),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+        "lm_head": init_lm_head(kh, cfg),
+    }
+
+
+def _encode(params, frames, key, policy, cfg, sdpa_hint=None):
+    """frames: (B, S_enc, d) precomputed frame embeddings (stub frontend)."""
+    B, S, d = frames.shape
+    h = frames + sinusoidal_positions(S, d).astype(frames.dtype)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+
+    def body(hh, xs):
+        lp, lk = xs
+        x = apply_norm(lp["ln1"], hh, cfg.norm)
+        hh = hh + attention(lp["attn"], x, lk, policy, cfg, pos,
+                            causal=False, sdpa_hint=sdpa_hint).astype(hh.dtype)
+        x = apply_norm(lp["ln2"], hh, cfg.norm)
+        return hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype), 0
+    keys = jax.random.split(key, cfg.enc_layers)
+    h, _ = scan_or_loop(body, h, (params["enc_layers"], keys),
+                        cfg.unroll_scan)
+    return apply_norm(params["enc_norm"], h, cfg.norm)
+
+
+def _decode_seq(params, tokens, enc_out, key, policy, cfg, want_cache=False,
+                sdpa_hint=None):
+    B, T = tokens.shape
+    h = (embed(params["embed"], tokens)
+         + params["pos_embed"][:T]).astype(enc_out.dtype)
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+
+    def body(carry, xs):
+        hh = carry
+        lp, lk = xs
+        x = apply_norm(lp["ln1"], hh, cfg.norm)
+        if want_cache:
+            att, (k, v) = attention(lp["self_attn"], x, lk, policy, cfg, pos,
+                                    return_kv=True, sdpa_hint=sdpa_hint)
+            skv = {"k": k.reshape(B, T, -1), "v": v.reshape(B, T, -1)}
+        else:
+            att = attention(lp["self_attn"], x, lk, policy, cfg, pos,
+                            sdpa_hint=sdpa_hint)
+            skv = 0
+        hh = hh + att.astype(hh.dtype)
+        x = apply_norm(lp["ln_x"], hh, cfg.norm)
+        ck, cv = cross_attention_kv(lp["cross_attn"], enc_out, lk, policy, cfg)
+        hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
+                            causal=False, kv_override=(ck, cv),
+                            sdpa_hint=sdpa_hint).astype(hh.dtype)
+        x = apply_norm(lp["ln2"], hh, cfg.norm)
+        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype)
+        Sx = enc_out.shape[1]
+        xkv = ({"k": ck.reshape(B, Sx, -1), "v": cv.reshape(B, Sx, -1)}
+               if want_cache else 0)
+        return hh, (skv, xkv)
+    keys = jax.random.split(key, cfg.n_layers)
+    h, caches = scan_or_loop(body, h, (params["dec_layers"], keys),
+                             cfg.unroll_scan)
+    return apply_norm(params["final_norm"], h, cfg.norm), caches
+
+
+def encdec_loss(params, batch, key, policy: QuantPolicy, cfg: ArchConfig,
+                remat: bool = False, dtype=None, act_sharding=None,
+                sdpa_hint=None, loss_chunks: int = 1):
+    ke, kd = jax.random.split(key)
+    frames = batch["frames"]
+    if dtype is not None:
+        frames = frames.astype(dtype)
+    enc = _encode(params, frames, ke, policy, cfg, sdpa_hint)
+    h, _ = _decode_seq(params, batch["tokens"], enc, kd, policy, cfg,
+                       sdpa_hint=sdpa_hint)
+    loss = chunked_head_loss(params, h, batch["labels"], kd, policy, cfg,
+                             loss_chunks, cfg.unroll_scan,
+                             act_sharding=act_sharding)
+    return loss, {"ce": loss}
+
+
+def init_encdec_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                      dtype=jnp.float32):
+    L = cfg.n_layers
+    self_kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                           init_kv_cache(cfg, batch, max_seq, dtype))
+    cross_kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (L,) + x.shape),
+                            init_kv_cache(cfg, batch, cfg.enc_seq, dtype))
+    return {"self_kv": self_kv, "cross_kv": cross_kv,
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def encdec_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
+                   max_seq=None, dtype=None, sdpa_hint=None):
+    """Encode audio + teacher-force the prompt; return logits + caches."""
+    key = jax.random.PRNGKey(0)
+    frames = batch["frames"]
+    if dtype is not None:
+        frames = frames.astype(dtype)
+    enc = _encode(params, frames, key, policy, cfg, sdpa_hint)
+    tokens = batch["tokens"]
+    B, T = tokens.shape
+    max_seq = max_seq or T
+    h, (skv, xkv) = _decode_seq(params, tokens, enc, key, policy, cfg,
+                                want_cache=True, sdpa_hint=sdpa_hint)
+    logits = lm_head(params["lm_head"], h[:, -1:], key, policy)
+    def pad(x):
+        return jnp.pad(x, ((0, 0), (0, 0), (0, max_seq - x.shape[2]), (0, 0)))
+    cache = {"self_kv": jax.tree.map(pad, skv), "cross_kv": xkv,
+             "index": jnp.asarray(T, jnp.int32)}
+    return logits, cache
+
+
+def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
+    key = jax.random.PRNGKey(0)
+    tokens = batch["tokens"]                                    # (B, 1)
+    B = tokens.shape[0]
+    index = cache["index"]
+    h = (embed(params["embed"], tokens)
+         + params["pos_embed"][index][None, None]).astype(
+             cache["self_kv"]["k"].dtype)
+
+    def body(hh, xs):
+        lp, skv, xkv, lk = xs
+        x = apply_norm(lp["ln1"], hh, cfg.norm)
+        att, skv = decode_attention(lp["self_attn"], x, skv, index, lk,
+                                    policy, cfg)
+        hh = hh + att.astype(hh.dtype)
+        x = apply_norm(lp["ln_x"], hh, cfg.norm)
+        Sx = xkv["k"].shape[1]
+        ck = xkv["k"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
+        cv = xkv["v"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
+        pos = jnp.full((B, 1), index, jnp.int32)
+        hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
+                            causal=False, kv_override=(ck, cv)).astype(hh.dtype)
+        x = apply_norm(lp["ln2"], hh, cfg.norm)
+        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype)
+        return hh, skv
+    keys = jax.random.split(key, cfg.n_layers)
+    h, skvs = scan_or_loop(body, h, (params["dec_layers"], cache["self_kv"],
+                                     cache["cross_kv"], keys),
+                           cfg.unroll_scan)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = lm_head(params["lm_head"], h, key, policy)
+    new_cache = {"self_kv": skvs, "cross_kv": cache["cross_kv"],
+                 "index": index + 1}
+    return logits, new_cache

@@ -1,0 +1,458 @@
+"""Decoder-only LM covering the dense / MoE / VLM / RWKV6 / Zamba2-hybrid
+families.  Per-layer parameters are stacked ``(L, ...)`` and the stack runs
+under ``lax.scan`` so HLO size is depth-independent (DESIGN.md Sec. 4).
+
+Three entry points per model:
+  * loss      — full-sequence training loss (teacher forcing)
+  * prefill   — full-sequence forward returning last-position logits + cache
+  * decode    — one-token step with cache
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ArchConfig
+from ..core import QuantPolicy
+from ..layers import (apply_norm, attention, decode_attention, embed,
+                      init_attention, init_embedding, init_kv_cache,
+                      init_lm_head, init_mamba2_layer, init_mamba2_state,
+                      init_mlp, init_moe, init_norm, init_rwkv_layer,
+                      init_rwkv_state, lm_head, mamba2_decode_step,
+                      mamba2_layer, mlp, moe_block, rwkv_decode_step,
+                      rwkv_layer)
+
+__all__ = ["init_lm_params", "lm_loss", "lm_prefill", "lm_decode",
+           "init_lm_cache", "cross_entropy", "scan_or_loop"]
+
+
+def scan_or_loop(body, carry, xs, unroll: bool):
+    """lax.scan, or an unrolled python loop when ``unroll`` (dry-run probes:
+    XLA cost analysis counts while-loop bodies once, so probes unroll)."""
+    if not unroll:
+        return jax.lax.scan(body, carry, xs)
+    n = jax.tree.leaves(xs)[0].shape[0]
+    ys = []
+    for i in range(n):
+        xi = jax.tree.map(lambda a: a[i], xs)
+        carry, y = body(carry, xi)
+        ys.append(y)
+    stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
+    return carry, stacked
+
+
+def _constrain(h, sharding):
+    if sharding is not None:
+        return jax.lax.with_sharding_constraint(h, sharding)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_tx_layer(key, cfg: ArchConfig) -> dict:
+    ka, km, k1, k2 = jax.random.split(key, 4)
+    p = {"ln1": init_norm(cfg.d_model, cfg.norm),
+         "attn": init_attention(ka, cfg),
+         "ln2": init_norm(cfg.d_model, cfg.norm)}
+    if cfg.moe_experts:
+        p["moe"] = init_moe(km, cfg)
+    else:
+        p["mlp"] = init_mlp(km, cfg.d_model, cfg.d_ff, cfg.act)
+    return p
+
+
+def init_lm_params(key, cfg: ArchConfig) -> dict:
+    ke, kl, kh, ks = jax.random.split(key, 4)
+    params = {"embed": init_embedding(ke, cfg),
+              "final_norm": init_norm(cfg.d_model, cfg.norm),
+              "lm_head": init_lm_head(kh, cfg)}
+    if cfg.family == "hybrid":
+        n_outer = cfg.n_layers // cfg.hybrid_period
+        inner = cfg.hybrid_period
+        lkeys = jax.random.split(kl, n_outer * inner).reshape(n_outer, inner, -1)
+        params["layers"] = jax.vmap(jax.vmap(
+            lambda k: init_mamba2_layer(k, cfg)))(lkeys)
+        fkeys = jax.random.split(jax.random.fold_in(kl, 1), n_outer)
+        params["fuse"] = jax.vmap(
+            lambda k: {"w": jax.random.normal(k, (2 * cfg.d_model, cfg.d_model))
+                       * (0.5 / jnp.sqrt(cfg.d_model))})(fkeys)
+        params["shared"] = _init_tx_layer(ks, cfg)     # ONE shared block
+    elif cfg.ssm_kind == "rwkv6":
+        lkeys = jax.random.split(kl, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: init_rwkv_layer(k, cfg))(lkeys)
+    else:
+        lkeys = jax.random.split(kl, cfg.n_layers)
+        params["layers"] = jax.vmap(lambda k: _init_tx_layer(k, cfg))(lkeys)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Layer application (full-sequence)
+# ---------------------------------------------------------------------------
+
+def _tx_layer(p, h, key, policy, cfg, positions, state=None, sdpa_hint=None,
+              moe_hint=None):
+    """(pre-norm attention + MLP/MoE). state: optional kv dict for prefill."""
+    x = apply_norm(p["ln1"], h, cfg.norm)
+    if state is None:
+        att = attention(p["attn"], x, key, policy, cfg, positions,
+                        sdpa_hint=sdpa_hint)
+        kv = None
+    else:
+        att, (k, v) = attention(p["attn"], x, key, policy, cfg, positions,
+                                return_kv=True, sdpa_hint=sdpa_hint)
+        B, S = k.shape[0], k.shape[1]
+        kv = {"k": k.reshape(B, S, -1), "v": v.reshape(B, S, -1)}
+    h = h + att.astype(h.dtype)
+    x = apply_norm(p["ln2"], h, cfg.norm)
+    if cfg.moe_experts:
+        y, aux = moe_block(p["moe"], x, key, policy, cfg, moe_hint=moe_hint)
+    else:
+        y, aux = mlp(p["mlp"], x, key, policy, cfg.act), 0.0
+    return h + y.astype(h.dtype), aux, kv
+
+
+def _forward_seq(params, h, key, policy: QuantPolicy, cfg: ArchConfig,
+                 positions, want_cache: bool, remat: bool = False,
+                 act_sharding=None, sdpa_hint=None, moe_hint=None):
+    """Scan the layer stack over a full sequence.
+
+    Returns (h, aux_loss, cache_or_None). h: (B, T, d).
+    act_sharding: optional NamedSharding for the residual stream between
+    layers — sequence parallelism (DESIGN.md Sec. 4): P(dp, "model", None)
+    shards the token dim over the TP axis, cutting saved-activation memory
+    and norm compute by the TP degree."""
+    B = h.shape[0]
+    h = _constrain(h, act_sharding)
+
+    if cfg.family == "hybrid":
+        return _forward_hybrid(params, h, key, policy, cfg, positions,
+                               want_cache, remat, act_sharding, sdpa_hint)
+
+    if cfg.ssm_kind == "rwkv6":
+        def body(carry, xs):
+            hh = carry
+            lp, lk = xs
+            hh, st = rwkv_layer(lp, hh, lk, policy, cfg)
+            return _constrain(hh, act_sharding), (st if want_cache else 0)
+        if remat:
+            body = jax.checkpoint(body)
+        keys = jax.random.split(key, cfg.n_layers)
+        h, states = scan_or_loop(body, h, (params["layers"], keys),
+                                 cfg.unroll_scan)
+        return h, 0.0, (states if want_cache else None)
+
+    def body(carry, xs):
+        hh, aux = carry
+        lp, lk = xs
+        hh, a, kv = _tx_layer(lp, hh, lk, policy, cfg, positions,
+                              state=({} if want_cache else None),
+                              sdpa_hint=sdpa_hint, moe_hint=moe_hint)
+        return (_constrain(hh, act_sharding), aux + a), (kv if want_cache else 0)
+    if remat:
+        body = jax.checkpoint(body)
+    keys = jax.random.split(key, cfg.n_layers)
+    (h, aux), kvs = scan_or_loop(body, (h, 0.0), (params["layers"], keys),
+                                 cfg.unroll_scan)
+    return h, aux, (kvs if want_cache else None)
+
+
+def _forward_hybrid(params, h, key, policy, cfg, positions, want_cache,
+                    remat=False, act_sharding=None, sdpa_hint=None):
+    """Zamba2: scan of [hybrid_period x mamba2] + shared attn block."""
+    n_outer = cfg.n_layers // cfg.hybrid_period
+    h0 = h                                       # residual stream input
+    shared = params["shared"]
+
+    def outer_body(carry, xs):
+        hh = carry
+        (mp, fuse, okey) = xs
+        ikeys = jax.random.split(okey, cfg.hybrid_period + 1)
+
+        def inner_body(ih, ixs):
+            lp, lk = ixs
+            ih, st = mamba2_layer(lp, ih, lk, policy, cfg)
+            return _constrain(ih, act_sharding), (st if want_cache else 0)
+        hh, msts = scan_or_loop(inner_body, hh,
+                                (mp, ikeys[:cfg.hybrid_period]),
+                                cfg.unroll_scan)
+        # shared attention block on concat(h, h0), fused back to d_model
+        z = (jnp.concatenate([hh, h0], axis=-1)
+             @ fuse["w"].astype(hh.dtype))
+        skey = ikeys[-1]
+        if want_cache:
+            z2, _, kv = _tx_layer(shared, z, skey, policy, cfg, positions,
+                                  state={}, sdpa_hint=sdpa_hint)
+        else:
+            z2, _, kv = _tx_layer(shared, z, skey, policy, cfg, positions,
+                                  sdpa_hint=sdpa_hint)
+        hh = hh + z2.astype(hh.dtype)
+        return _constrain(hh, act_sharding), ((msts, kv) if want_cache else 0)
+
+    if remat:
+        outer_body = jax.checkpoint(outer_body)
+    okeys = jax.random.split(key, n_outer)
+    h, caches = scan_or_loop(outer_body, h,
+                             (params["layers"], params["fuse"], okeys),
+                             cfg.unroll_scan)
+    return h, 0.0, (caches if want_cache else None)
+
+
+# ---------------------------------------------------------------------------
+# Embedding-or-token inputs
+# ---------------------------------------------------------------------------
+
+def _input_embed(params, batch, cfg: ArchConfig):
+    if "embeds" in batch:                        # VLM stub frontend
+        return batch["embeds"]
+    return embed(params["embed"], batch["tokens"])
+
+
+def _positions(batch, cfg, B, T):
+    if "positions" in batch:
+        return batch["positions"]
+    pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    if cfg.rope == "mrope":
+        pos = jnp.broadcast_to(pos[None], (3, B, T))
+    return pos
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  vocab_size: int) -> jax.Array:
+    """Mean next-token CE with padded-vocab masking."""
+    vp = logits.shape[-1]
+    if vp > vocab_size:
+        neg = jnp.full((vp - vocab_size,), -1e30, logits.dtype)
+        logits = logits.at[..., vocab_size:].set(neg)
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -jnp.mean(ll)
+
+
+def _chunk_rows_sharding(act_sharding):
+    """Sharding for flattened token rows, derived from the residual-stream
+    sharding.  The (B,T,d)->(rows,d) reshape mixes the data- and model-axis
+    shards, which breaks GSPMD propagation and silently REPLICATES the head
+    GEMMs (measured 16x flops, EXPERIMENTS.md Perf iteration 1) — an explicit
+    constraint on the chunked rows restores sharding."""
+    if act_sharding is None:
+        return None
+    axes = []
+    for part in tuple(act_sharding.spec)[:2]:
+        if part is None:
+            continue
+        axes.extend(part if isinstance(part, (tuple, list)) else [part])
+    if not axes:
+        return None
+    from jax.sharding import NamedSharding, PartitionSpec
+    return NamedSharding(act_sharding.mesh,
+                         PartitionSpec(None, tuple(axes), None))
+
+
+def chunked_head_loss(params, h, labels, key, policy, cfg,
+                      n_chunks: int, unroll: bool,
+                      act_sharding=None) -> jax.Array:
+    """lm_head projection + CE over token chunks.
+
+    At 150-250k vocab, materializing full (tokens x vocab) logits plus the
+    FQT backward's SR uniforms and codes for the head gradient dominates HBM
+    (the dry-run profile showed ~40 GiB/device of head-path tensors).
+    Chunking bounds every head-path tensor to tokens/n_chunks; the chunk loop
+    is a scan, so the backward (including the quantized head-grad GEMMs)
+    streams too.
+    """
+    d = h.shape[-1]
+    h2 = h.reshape(-1, d)
+    y2 = labels.reshape(-1)
+    R = h2.shape[0]
+    if n_chunks <= 1 or R % n_chunks != 0:
+        logits = lm_head(params["lm_head"], h, key, policy)
+        return cross_entropy(logits, labels, cfg.vocab_size)
+    hc = h2.reshape(n_chunks, R // n_chunks, d)
+    yc = y2.reshape(n_chunks, R // n_chunks)
+    rows_sh = _chunk_rows_sharding(act_sharding)
+    if rows_sh is not None:
+        n_shards = 1
+        for ax in tuple(rows_sh.spec)[1]:
+            n_shards *= rows_sh.mesh.shape[ax]
+        if (R // n_chunks) % n_shards == 0:
+            hc = jax.lax.with_sharding_constraint(hc, rows_sh)
+
+    def body(acc, xs):
+        h_c, y_c = xs
+        logits = lm_head(params["lm_head"], h_c, key, policy)
+        vp = logits.shape[-1]
+        if vp > cfg.vocab_size:
+            neg = jnp.full((vp - cfg.vocab_size,), -1e30, logits.dtype)
+            logits = logits.at[..., cfg.vocab_size:].set(neg)
+        logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+        ll = jnp.take_along_axis(logp, y_c[:, None], axis=-1)[:, 0]
+        return acc + jnp.sum(ll), 0
+
+    total, _ = scan_or_loop(body, jnp.float32(0.0), (hc, yc), unroll)
+    return -total / R
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def lm_loss(params, batch, key, policy: QuantPolicy, cfg: ArchConfig,
+            remat: bool = False, dtype=None, act_sharding=None,
+            sdpa_hint=None, moe_hint=None, loss_chunks: int = 1):
+    h = _input_embed(params, batch, cfg)
+    if dtype is not None:
+        h = h.astype(dtype)
+    B, T = h.shape[0], h.shape[1]
+    pos = _positions(batch, cfg, B, T)
+    h, aux, _ = _forward_seq(params, h, key, policy, cfg, pos,
+                             want_cache=False, remat=remat,
+                             act_sharding=act_sharding, sdpa_hint=sdpa_hint,
+                             moe_hint=moe_hint)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    loss = chunked_head_loss(params, h, batch["labels"], key, policy, cfg,
+                             loss_chunks, cfg.unroll_scan,
+                             act_sharding=act_sharding)
+    if cfg.moe_experts:
+        loss = loss + 0.01 * aux / cfg.n_layers
+    return loss, {"ce": loss, "aux": aux}
+
+
+def init_lm_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=jnp.float32):
+    """Abstract-safe cache constructor (works under jax.eval_shape)."""
+    if cfg.family == "hybrid":
+        n_outer = cfg.n_layers // cfg.hybrid_period
+        mam = jax.tree.map(
+            lambda x: jnp.broadcast_to(
+                x, (n_outer, cfg.hybrid_period) + x.shape),
+            init_mamba2_state(cfg, batch, dtype))
+        kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (n_outer,) + x.shape),
+                          init_kv_cache(cfg, batch, max_seq, dtype))
+        return {"mamba": mam, "kv": kv, "index": jnp.zeros((), jnp.int32)}
+    if cfg.ssm_kind == "rwkv6":
+        st = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+                          init_rwkv_state(cfg, batch, dtype))
+        return {"state": st, "index": jnp.zeros((), jnp.int32)}
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+                      init_kv_cache(cfg, batch, max_seq, dtype))
+    return {"kv": kv, "index": jnp.zeros((), jnp.int32)}
+
+
+def lm_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
+               max_seq: Optional[int] = None, dtype=None, sdpa_hint=None):
+    """Forward the prompt; return (last-position logits, cache)."""
+    key = jax.random.PRNGKey(0)                   # fwd quantizers are deterministic
+    h = _input_embed(params, batch, cfg)
+    if dtype is not None:
+        h = h.astype(dtype)
+    B, T = h.shape[0], h.shape[1]
+    max_seq = max_seq or T
+    pos = _positions(batch, cfg, B, T)
+    h, _, cache = _forward_seq(params, h, key, policy, cfg, pos,
+                               want_cache=True, sdpa_hint=sdpa_hint)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = lm_head(params["lm_head"], h[:, -1:], key, policy)
+
+    index = jnp.asarray(T, jnp.int32)
+    if cfg.family == "hybrid":
+        msts, kvs = cache
+        kvs = _pad_kv(kvs, max_seq)
+        out = {"mamba": msts, "kv": kvs, "index": index}
+    elif cfg.ssm_kind == "rwkv6":
+        out = {"state": cache, "index": index}
+    else:
+        out = {"kv": _pad_kv(cache, max_seq), "index": index}
+    return logits, out
+
+
+def _pad_kv(kvs, max_seq):
+    def pad(x):                                   # (L, B, T, f) -> (L, B, S, f)
+        T = x.shape[2]
+        if T == max_seq:
+            return x
+        return jnp.pad(x, ((0, 0), (0, 0), (0, max_seq - T), (0, 0)))
+    return jax.tree.map(pad, kvs)
+
+
+def _cache_dtype(cache):
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        if leaf.dtype in (jnp.bfloat16, jnp.float32, jnp.float16):
+            return leaf.dtype
+    return jnp.float32
+
+
+def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
+    """One-token decode step: batch has `tokens` (B,1) or `embeds` (B,1,d)."""
+    key = jax.random.PRNGKey(0)
+    h = _input_embed(params, batch, cfg).astype(_cache_dtype(cache))
+    B = h.shape[0]
+    index = cache["index"]
+
+    if cfg.family == "hybrid":
+        h0 = h
+        shared = params["shared"]
+
+        def outer(carry, xs):
+            hh = carry
+            mp, fuse, mst, kvc, okey = xs
+            ikeys = jax.random.split(okey, cfg.hybrid_period + 1)
+
+            def inner(ih, ixs):
+                lp, lst, lk = ixs
+                ih, st = mamba2_decode_step(lp, ih, lst, lk, policy, cfg)
+                return ih, st
+            hh, msts = scan_or_loop(inner, hh,
+                                    (mp, mst, ikeys[:cfg.hybrid_period]),
+                                    cfg.unroll_scan)
+            z = (jnp.concatenate([hh, h0], axis=-1)
+                 @ fuse["w"].astype(hh.dtype))
+            x = apply_norm(shared["ln1"], z, cfg.norm)
+            att, kvc = decode_attention(shared["attn"], x, kvc, index,
+                                        ikeys[-1], policy, cfg)
+            z = z + att.astype(z.dtype)
+            x = apply_norm(shared["ln2"], z, cfg.norm)
+            z = z + mlp(shared["mlp"], x, ikeys[-1], policy, cfg.act).astype(z.dtype)
+            hh = hh + z
+            return hh, (msts, kvc)
+        n_outer = cfg.n_layers // cfg.hybrid_period
+        okeys = jax.random.split(key, n_outer)
+        h, (msts, kvs) = scan_or_loop(
+            outer, h, (params["layers"], params["fuse"], cache["mamba"],
+                       cache["kv"], okeys), cfg.unroll_scan)
+        new_cache = {"mamba": msts, "kv": kvs, "index": index + 1}
+    elif cfg.ssm_kind == "rwkv6":
+        def body(hh, xs):
+            lp, lst, lk = xs
+            hh, st = rwkv_decode_step(lp, hh, lst, lk, policy, cfg)
+            return hh, st
+        keys = jax.random.split(key, cfg.n_layers)
+        h, sts = scan_or_loop(body, h, (params["layers"], cache["state"],
+                                        keys), cfg.unroll_scan)
+        new_cache = {"state": sts, "index": index + 1}
+    else:
+        def body(hh, xs):
+            lp, kvc, lk = xs
+            x = apply_norm(lp["ln1"], hh, cfg.norm)
+            att, kvc = decode_attention(lp["attn"], x, kvc, index, lk,
+                                        policy, cfg)
+            hh = hh + att.astype(hh.dtype)
+            x = apply_norm(lp["ln2"], hh, cfg.norm)
+            if cfg.moe_experts:
+                y, _ = moe_block(lp["moe"], x, lk, policy, cfg)
+            else:
+                y = mlp(lp["mlp"], x, lk, policy, cfg.act)
+            return hh + y.astype(hh.dtype), kvc
+        keys = jax.random.split(key, cfg.n_layers)
+        h, kvs = scan_or_loop(body, h, (params["layers"], cache["kv"], keys),
+                              cfg.unroll_scan)
+        new_cache = {"kv": kvs, "index": index + 1}
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = lm_head(params["lm_head"], h, key, policy)
+    return logits, new_cache

@@ -1,0 +1,97 @@
+"""Optimizers built from scratch (no optax): SGD-momentum (the paper's
+optimizer for ResNets), AdamW (for the LM archs), cosine schedule with linear
+warmup (paper App. E), and global-norm clipping.
+
+Functional API:  ``opt = sgd(momentum=0.9)``;
+``state = opt.init(params)``; ``params, state = opt.apply(params, grads,
+state, lr)``.  States are pytrees of the same structure as params, so the
+sharding plan's param specs apply verbatim to optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["Optimizer", "sgd", "adamw", "cosine_schedule", "clip_by_global_norm",
+           "global_norm"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable
+    apply: Callable                 # (params, grads, state, lr) -> (params, state)
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g))
+                        for g in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm
+
+
+def sgd(momentum: float = 0.9, weight_decay: float = 0.0,
+        nesterov: bool = False) -> Optimizer:
+    """SGD with (heavy-ball) momentum — the paper's CIFAR/ImageNet setting."""
+
+    def init(params):
+        return {"mu": jax.tree.map(jnp.zeros_like, params)}
+
+    def apply(params, grads, state, lr):
+        if weight_decay:
+            grads = jax.tree.map(lambda g, p: g + weight_decay * p,
+                                 grads, params)
+        mu = jax.tree.map(lambda m, g: momentum * m + g, state["mu"], grads)
+        upd = (jax.tree.map(lambda m, g: momentum * m + g, mu, grads)
+               if nesterov else mu)
+        params = jax.tree.map(lambda p, u: p - lr * u, params, upd)
+        return params, {"mu": mu}
+
+    return Optimizer(init=init, apply=apply)
+
+
+def adamw(b1: float = 0.9, b2: float = 0.95, eps: float = 1e-8,
+          weight_decay: float = 0.1) -> Optimizer:
+    def init(params):
+        return {"m": jax.tree.map(jnp.zeros_like, params),
+                "v": jax.tree.map(jnp.zeros_like, params),
+                "t": jnp.zeros((), jnp.int32)}
+
+    def apply(params, grads, state, lr):
+        t = state["t"] + 1
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** t.astype(jnp.float32)
+        bc2 = 1 - b2 ** t.astype(jnp.float32)
+
+        def upd(p, m_, v_):
+            step = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+            return p - lr * (step + weight_decay * p)
+        params = jax.tree.map(upd, params, m, v)
+        return params, {"m": m, "v": v, "t": t}
+
+    return Optimizer(init=init, apply=apply)
+
+
+def cosine_schedule(base_lr: float, total_steps: int,
+                    warmup_steps: int = 0, final_frac: float = 0.0):
+    """Linear warmup + cosine decay (paper App. E)."""
+
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps)
+                        / jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(step < warmup_steps, warm, base_lr * cos)
+
+    return lr

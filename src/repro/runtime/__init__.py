@@ -1,0 +1,5 @@
+from .fault_tolerance import (ElasticController, PreemptionHandler,
+                              StragglerMonitor, retry)
+
+__all__ = ["PreemptionHandler", "StragglerMonitor", "retry",
+           "ElasticController"]

@@ -1,0 +1,3 @@
+from .plan import ShardingPlan, make_plan
+
+__all__ = ["ShardingPlan", "make_plan"]

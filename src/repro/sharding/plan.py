@@ -1,0 +1,214 @@
+"""Sharding plan: logical-parameter roles -> mesh PartitionSpecs.
+
+Megatron-style tensor parallelism over the ``model`` axis; batch over
+``(pod, data)``.  Every rule is divisibility-audited against the actual mesh
+axis sizes (jax rejects unevenly sharded *inputs*), falling back to
+replication when a dim doesn't divide — so the same plan drives the 16x16
+production mesh, the 2x16x16 multi-pod mesh, and tiny test meshes.
+
+Role rules (DESIGN.md Sec. 4):
+  column-parallel (shard GEMM output):  wq/wk/wv, gate/up/fc1, z/x/dt proj,
+                                        rwkv r/k/v/g, lm_head, fuse
+  row-parallel    (shard GEMM input):   wo, down/fc2, out_proj, rwkv wo/cm_wv
+  expert-parallel (shard expert axis):  moe experts
+  vocab-parallel:                       embedding table
+  replicated:                           norms, routers, loras, decays, bc_proj
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["ShardingPlan", "make_plan"]
+
+# trailing-dims spec per role; leading stacked axes (L / n_outer,inner) get None
+_COL2 = ("_", "model")            # (in, out) -> shard out
+_ROW2 = ("model", "_")            # (in, out) -> shard in
+_VEC = ("model",)
+_REP = None                       # fully replicated
+
+_RULES = [
+    # (path substring, trailing spec) — first match wins
+    ("embed/table", ("model", "_")),
+    ("lm_head/w", _COL2),
+    ("pos_embed", _REP),
+    # attention
+    ("attn/wq/w", _COL2), ("attn/wk/w", _COL2), ("attn/wv/w", _COL2),
+    ("attn/wq/b", _VEC), ("attn/wk/b", _VEC), ("attn/wv/b", _VEC),
+    ("attn/wo/w", _ROW2),
+    # dense mlp
+    ("mlp/gate/w", _COL2), ("mlp/up/w", _COL2), ("mlp/fc1/w", _COL2),
+    ("mlp/down/w", _ROW2), ("mlp/fc2/w", _ROW2),
+    ("mlp/gate/b", _VEC), ("mlp/up/b", _VEC), ("mlp/fc1/b", _VEC),
+    # moe: expert axis parallel (trailing dims (E, in, out))
+    ("moe/router", _REP),
+    ("moe/experts", ("model", "_", "_")),
+    # rwkv6
+    ("wr/w", _COL2), ("wk/w", _COL2), ("wv/w", _COL2), ("wg/w", _COL2),
+    ("wo/w", _ROW2),
+    ("cm_wk/w", _COL2), ("cm_wv/w", _ROW2), ("cm_wr/w", _REP),
+    ("/u", ("model", "_")),
+    ("ln_x", _VEC),
+    # mamba2
+    ("z_proj/w", _COL2), ("x_proj/w", _COL2), ("dt_proj/w", _COL2),
+    ("bc_proj", _REP),
+    ("conv_x_w", ("_", "model")), ("conv_x_b", _VEC),
+    ("conv_bc", _REP),
+    ("A_log", _VEC), ("/D", _VEC), ("dt_bias", _VEC),
+    ("out_norm", _VEC),
+    ("out_proj/w", _ROW2),
+    ("fuse/w", _COL2),
+]
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+    return "/" + "/".join(parts)
+
+
+class ShardingPlan:
+    """Holds the mesh + axis naming and produces shardings for trees."""
+
+    def __init__(self, mesh: Mesh, data_axes=("data",), model_axis="model"):
+        self.mesh = mesh
+        self.data_axes = tuple(a for a in data_axes if a in mesh.shape)
+        self.model_axis = model_axis if model_axis in mesh.shape else None
+        self.model_size = mesh.shape.get(model_axis, 1)
+        self.dp_size = 1
+        for a in self.data_axes:
+            self.dp_size *= mesh.shape[a]
+
+    # -- parameters ---------------------------------------------------------
+    def _trailing_spec(self, trailing, shape):
+        """Map a rule's trailing pattern onto the last len(pattern) dims."""
+        n_lead = len(shape) - len(trailing)
+        if n_lead < 0:
+            return P()
+        spec = [None] * n_lead
+        for dim, tag in zip(shape[n_lead:], trailing):
+            if tag == "model" and self.model_axis and dim % self.model_size == 0:
+                spec.append(self.model_axis)
+            else:
+                spec.append(None)
+        return P(*spec)
+
+    def param_spec(self, path, leaf) -> P:
+        ps = _path_str(path)
+        for needle, trailing in _RULES:
+            if needle in ps:
+                if trailing is None:
+                    return P()
+                return self._trailing_spec(trailing, leaf.shape)
+        return P()  # norms, scalars, anything unmatched -> replicate
+
+    def param_specs(self, abstract_params):
+        return jax.tree_util.tree_map_with_path(self.param_spec,
+                                                abstract_params)
+
+    # -- batches / caches ----------------------------------------------------
+    def _dp(self, batch_dim: int):
+        """Data axes tuple if the batch dim divides, else None."""
+        if self.data_axes and batch_dim % self.dp_size == 0:
+            return self.data_axes if len(self.data_axes) > 1 else self.data_axes[0]
+        return None
+
+    def batch_spec(self, path, leaf) -> P:
+        ps = _path_str(path)
+        shape = leaf.shape
+        if "positions" in ps and len(shape) == 3:     # (3, B, T) m-rope
+            return P(None, self._dp(shape[1]), None)
+        dp = self._dp(shape[0])
+        return P(dp, *([None] * (len(shape) - 1)))
+
+    def batch_specs(self, abstract_batch):
+        return jax.tree_util.tree_map_with_path(self.batch_spec, abstract_batch)
+
+    def cache_spec(self, path, leaf) -> P:
+        ps = _path_str(path)
+        shape = leaf.shape
+        if "index" in ps:
+            return P()
+        m = self.model_axis
+
+        def md(dim):
+            return m if (m and dim % self.model_size == 0) else None
+
+        if "/kv/" in ps or "self_kv" in ps or "cross_kv" in ps:
+            # (L, B, S, kv*hd) or hybrid (n_outer, B, S, kv*hd)
+            return P(*([None] * (len(shape) - 3)), self._dp(shape[-3]), None,
+                     md(shape[-1]))
+        if ps.endswith("/h"):                          # mamba (..., B, H, P, N)
+            return P(*([None] * (len(shape) - 4)), self._dp(shape[-4]),
+                     md(shape[-3]), None, None)
+        if "conv_x" in ps:                             # (..., B, k-1, d_inner)
+            return P(*([None] * (len(shape) - 3)), self._dp(shape[-3]), None,
+                     md(shape[-1]))
+        if "conv_bc" in ps:
+            return P(*([None] * (len(shape) - 3)), self._dp(shape[-3]), None,
+                     None)
+        if ps.endswith("/s"):                          # rwkv (L, B, H, hd, hd)
+            return P(None, self._dp(shape[1]), md(shape[2]), None, None)
+        if "x_tm" in ps or "x_cm" in ps:               # (L, B, d)
+            return P(None, self._dp(shape[1]), None)
+        return P(*([None] * len(shape)))
+
+    def cache_specs(self, abstract_cache):
+        return jax.tree_util.tree_map_with_path(self.cache_spec, abstract_cache)
+
+    # -- attention q/k/v sharding (context parallel; DESIGN.md Sec. 4) -------
+    def attn_shardings(self, B: int, T: int, S: int, H: int, KV: int,
+                       hd: int):
+        """Constraints for q (B,T,H,hd) and k/v (B,S,KV,hd).
+
+        Head counts rarely divide the 16-way model axis (24 heads, kv=8), so
+        GSPMD splits head_dim 2-way and pays an O(T*S) score *all-reduce*
+        per layer (measured 25.8 GB/dev/layer at prefill_32k — EXPERIMENTS.md
+        Perf it. 6).  Context-parallel attention instead shards q over the
+        query-time axis (aligning with the sequence-parallel residual
+        stream) and gathers the much smaller k/v (S*KV*hd bf16), removing
+        the psum entirely.  Returns (q_sharding, kv_sharding) or None.
+        """
+        m, msz = self.model_axis, self.model_size
+        dp = self._dp(B)
+        if not (m and msz > 1) or T % msz != 0 or T <= 1:
+            return None
+        q_sh = NamedSharding(self.mesh, P(dp, m, None, None))
+        kv_sh = NamedSharding(self.mesh, P(dp, None, None, None))
+        return q_sh, kv_sh
+
+    # -- MoE dispatch sharding (expert x capacity; DESIGN.md Sec. 4) ---------
+    def moe_dispatch_sharding(self, E: int, C: int):
+        """Sharding for the dispatched expert buffer (E, C, d).
+
+        Expert weights shard E over `model`, but without a constraint the
+        capacity axis stays REPLICATED across the data axis — every data
+        shard recomputes every expert's full token block (measured 16x
+        expert FLOPs on granite-moe — EXPERIMENTS.md Perf).  Sharding C over
+        the data axes turns the dispatch scatter into the canonical MoE
+        all-to-all."""
+        m = self.model_axis if (self.model_axis and E % self.model_size == 0)             else None
+        dp = self._dp(C) if C % max(self.dp_size, 1) == 0 else None
+        if m is None and dp is None:
+            return None
+        return NamedSharding(self.mesh, P(m, dp, None))
+
+    # -- materialization -----------------------------------------------------
+    def shardings(self, spec_tree):
+        return jax.tree.map(lambda s: NamedSharding(self.mesh, s), spec_tree,
+                            is_leaf=lambda x: isinstance(x, P))
+
+
+def make_plan(mesh: Mesh) -> ShardingPlan:
+    axes = list(mesh.shape.keys())
+    data_axes = tuple(a for a in ("pod", "data") if a in axes)
+    return ShardingPlan(mesh, data_axes=data_axes, model_axis="model")

@@ -1,0 +1,110 @@
+"""Checkpoint manager: atomic writes, async, prune, elastic restore."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager
+
+
+def _tree(seed=0):
+    k = jax.random.PRNGKey(seed)
+    return {"params": {"w": jax.random.normal(k, (4, 8)),
+                       "layers": {"ln": jnp.ones((3,))}},
+            "opt": {"mu": {"w": jnp.zeros((4, 8)),
+                           "layers": {"ln": jnp.zeros((3,))}}},
+            "step": jnp.asarray(7)}
+
+
+def test_roundtrip(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = _tree()
+    ckpt.save(10, tree)
+    assert ckpt.latest_step() == 10
+    out = ckpt.restore(10, jax.tree.map(np.asarray, tree))
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_save_and_wait(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    tree = _tree(1)
+    ckpt.save(1, tree, asynchronous=True)
+    ckpt.wait()
+    assert ckpt.latest_step() == 1
+    out = ckpt.restore(1, tree)
+    np.testing.assert_allclose(np.asarray(out["params"]["w"]),
+                               np.asarray(tree["params"]["w"]))
+
+
+def test_prune_keeps_latest(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path), keep=2)
+    for s in (1, 2, 3, 4):
+        ckpt.save(s, _tree(s))
+    assert ckpt.all_steps() == [3, 4]
+
+
+def test_atomicity_no_tmp_left(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(5, _tree())
+    names = os.listdir(str(tmp_path))
+    assert not any(n.endswith(".tmp") for n in names)
+    assert "step_5" in names
+
+
+def test_restore_shape_mismatch_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(1, {"w": jnp.zeros((3, 3))})
+
+
+def test_restore_missing_leaf_raises(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(1, {"w": jnp.zeros((2, 2))})
+    with pytest.raises(KeyError):
+        ckpt.restore(1, {"w": jnp.zeros((2, 2)), "extra": jnp.zeros(1)})
+
+
+def test_meta(tmp_path):
+    ckpt = CheckpointManager(str(tmp_path))
+    ckpt.save(3, _tree(), extra={"lr": 0.1})
+    meta = ckpt.load_meta(3)
+    assert meta["step"] == 3 and meta["lr"] == pytest.approx(0.1)
+
+
+def test_train_resume_after_preemption(tmp_path):
+    """End-to-end fault-tolerance: preempt mid-run, resume, same stream."""
+    from repro.configs import get_config
+    from repro.core import QuantPolicy
+    from repro.launch.train import train_loop
+    from repro.runtime import PreemptionHandler
+
+    cfg = get_config("statquant-tx", smoke=True)
+    pol = QuantPolicy.fqt("psq", 6)
+
+    class StopAt(PreemptionHandler):
+        def __init__(self, at):
+            super().__init__()
+            self.at = at
+            self.count = 0
+
+        @property
+        def should_stop(self):
+            self.count += 1
+            return self.count >= self.at
+
+    # run 1: preempt after a few steps
+    train_loop(cfg, pol, steps=20, batch_size=2, seq_len=8,
+               ckpt_dir=str(tmp_path), ckpt_every=5,
+               preemption=StopAt(4), log_fn=lambda *a: None)
+    step1 = CheckpointManager(str(tmp_path)).latest_step()
+    assert step1 is not None and step1 >= 4
+    # run 2: resumes from the checkpoint and finishes
+    _, _, hist = train_loop(cfg, pol, steps=10, batch_size=2, seq_len=8,
+                            ckpt_dir=str(tmp_path), ckpt_every=100,
+                            log_fn=lambda *a: None)
+    assert hist[-1][0] == 9

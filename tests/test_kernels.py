@@ -1,0 +1,100 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ops import fused_qlinear, fused_quantize_psq
+from repro.kernels.q8_matmul import q8_matmul
+from repro.kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
+
+SHAPES = [(8, 16, 8), (128, 128, 128), (64, 256, 128), (256, 64, 512),
+          (32, 512, 32)]
+
+
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_q8_matmul_vs_ref(mkn):
+    M, K, N = mkn
+    key = jax.random.PRNGKey(M * 31 + N)
+    ks = jax.random.split(key, 8)
+    x8 = jax.random.randint(ks[0], (M, K), -128, 128, jnp.int8)
+    y8 = jax.random.randint(ks[1], (K, N), -128, 128, jnp.int8)
+    rs = jax.random.uniform(ks[2], (M,)) + 0.1
+    cs = jax.random.uniform(ks[3], (N,)) + 0.1
+    r2 = jax.random.normal(ks[4], (M,))
+    u = jax.random.normal(ks[5], (N,))
+    a = jax.random.normal(ks[6], (M,))
+    b = jax.random.normal(ks[7], (N,))
+    out = q8_matmul(x8, y8, rs, cs, r2, u, a, b, interpret=True)
+    expect = ref.q8_matmul_ref(x8, y8, rs, cs, r2, u, a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.parametrize("tile", [(8, 8, 8), (16, 16, 16), (128, 64, 32)])
+def test_q8_matmul_tilings(tile):
+    """Different BlockSpec tilings must give identical results."""
+    M, K, N = 128, 128, 128
+    key = jax.random.PRNGKey(0)
+    x8 = jax.random.randint(key, (M, K), -128, 128, jnp.int8)
+    y8 = jax.random.randint(jax.random.fold_in(key, 1), (K, N), -128, 128,
+                            jnp.int8)
+    z = jnp.zeros
+    ones = jnp.ones
+    full = q8_matmul(x8, y8, ones((M,)), ones((N,)), z((M,)), z((N,)),
+                     z((M,)), z((N,)), interpret=True)
+    bm, bn, bk = tile
+    tiled = q8_matmul(x8, y8, ones((M,)), ones((N,)), z((M,)), z((N,)),
+                      z((M,)), z((N,)), bm=bm, bn=bn, bk=bk, interpret=True)
+    np.testing.assert_array_equal(np.asarray(full), np.asarray(tiled))
+
+
+@pytest.mark.parametrize("shape", [(16, 32), (64, 128), (256, 64), (8, 512)])
+@pytest.mark.parametrize("bits", [4, 8])
+def test_quantize_sr_rows_vs_ref(shape, bits):
+    M, N = shape
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, N)) * 3
+    rbits = jax.random.bits(jax.random.PRNGKey(2), (M, N), jnp.uint32)
+    ck, cs, cz = quantize_sr_rows(x, rbits, bits, interpret=True)
+    rk, rs_, rz = ref.quantize_sr_rows_ref(x, rbits, bits)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(rs_), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(cz), np.asarray(rz), rtol=1e-6)
+
+
+@pytest.mark.parametrize("shape", [(16, 32), (128, 64)])
+def test_quantize_sr_tensor_vs_ref(shape):
+    M, N = shape
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, N))
+    rbits = jax.random.bits(jax.random.PRNGKey(4), (M, N), jnp.uint32)
+    ck, cs, cz = quantize_sr_tensor(x, rbits, 8, interpret=True)
+    rk, rs_, rz = ref.quantize_sr_tensor_ref(x, rbits, 8)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
+    assert abs(float(cs) - float(rs_)) < 1e-6 * abs(float(rs_))
+
+
+@pytest.mark.parametrize("mkn", [(16, 32, 16), (64, 128, 64), (128, 256, 128)])
+def test_fused_qlinear_matches_float(mkn):
+    """End-to-end fused path ~= exact float matmul within quantization error,
+    and exactly == the composed ref path."""
+    M, K, N = mkn
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.2
+    yk, _ = fused_qlinear(x, w, key, interpret=True, use_kernels=True)
+    yr, _ = fused_qlinear(x, w, key, interpret=True, use_kernels=False)
+    np.testing.assert_allclose(np.asarray(yk), np.asarray(yr),
+                               rtol=1e-4, atol=1e-3)
+    exact = np.asarray(x @ w)
+    rel = np.max(np.abs(np.asarray(yk) - exact)) / np.max(np.abs(exact))
+    assert rel < 0.05, f"8-bit fused GEMM should be ~1% off, got {rel}"
+
+
+def test_fused_psq_unbiased():
+    g = jax.random.normal(jax.random.PRNGKey(9), (32, 64))
+    outs = [fused_quantize_psq(g, jax.random.PRNGKey(100 + i), 6)
+            for i in range(128)]
+    mean = jnp.mean(jnp.stack(outs), 0)
+    assert float(jnp.max(jnp.abs(mean - g))) < 0.05

@@ -1,0 +1,83 @@
+"""End-to-end behaviour tests for the FQT system (paper reproduction).
+
+The paper's central empirical claims, at smoke scale:
+  * FQT@8bit trains as well as QAT (Table 1, 8-bit rows)
+  * low-bit PTQ degrades/diverges where BHQ keeps training (Table 1, 4-5 bit)
+  * the serving path generates coherently after training
+"""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.launch.serve import generate
+from repro.launch.train import train_loop
+from repro.models import build_model
+
+
+def _final_loss(policy, steps=40, seed=0, lr=4e-3):
+    cfg = get_config("statquant-tx", smoke=True)
+    _, _, hist = train_loop(cfg, policy, steps=steps, batch_size=4,
+                            seq_len=16, lr=lr, log_every=5, seed=seed,
+                            log_fn=lambda *a: None)
+    return hist[0][1], hist[-1][1]
+
+
+def test_exact_and_qat_and_fqt8_all_learn():
+    """All three regimes reduce loss on learnable synthetic data, and FQT@8
+    tracks QAT closely (Theorem 1 consequence at eta -> small)."""
+    first_e, last_e = _final_loss(QuantPolicy.exact())
+    first_q, last_q = _final_loss(QuantPolicy.qat())
+    first_f, last_f = _final_loss(QuantPolicy.fqt("bhq", 8, bhq_block=16))
+    assert last_e < first_e - 0.2
+    assert last_q < first_q - 0.2
+    assert last_f < first_f - 0.2
+    # FQT@8bit within a modest margin of QAT (paper: indistinguishable)
+    assert last_f < last_q + 0.4, (last_f, last_q)
+
+
+def test_low_bit_bhq_beats_ptq():
+    """Paper Table 1 directionally: at very low bits, PTQ's gradient variance
+    exceeds BHQ's (the mechanism behind the accuracy gap), and BHQ training
+    stays in the same loss ballpark or better.  The tiny-proxy loss itself is
+    noise-dominated, so the hard assertion is on the variance ordering."""
+    from benchmarks.common import grad_snapshot
+    from repro.core import quantize_bhq_stoch, quantize_ptq_stoch
+    from repro.core.theory import empirical_mean_and_variance
+    (_, g), *_ = grad_snapshot(steps=10, batch=4, seq=16)
+    _, v_ptq = empirical_mean_and_variance(
+        jax.jit(lambda x, k: quantize_ptq_stoch(x, k, 3).dequant()),
+        g, jax.random.PRNGKey(0), 128)
+    _, v_bhq = empirical_mean_and_variance(
+        jax.jit(lambda x, k: quantize_bhq_stoch(
+            x, k, 3, block_rows=64).dequant()),
+        g, jax.random.PRNGKey(0), 128)
+    assert float(v_bhq) < float(v_ptq), (float(v_bhq), float(v_ptq))
+    losses = {}
+    for quant in ("ptq", "bhq"):
+        _, last = _final_loss(QuantPolicy.fqt(quant, 3, bhq_block=16),
+                              steps=60)
+        losses[quant] = last
+    assert losses["bhq"] <= losses["ptq"] + 0.5, losses
+
+
+def test_trained_model_generates():
+    cfg = get_config("statquant-tx", smoke=True)
+    pol = QuantPolicy.fqt("psq", 6)
+    params, _, _ = train_loop(cfg, pol, steps=20, batch_size=4, seq_len=16,
+                              log_fn=lambda *a: None)
+    model = build_model(cfg)
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32)}
+    toks = generate(model, params, batch, QuantPolicy.qat(),
+                    max_new=4, max_seq=16)
+    assert toks.shape == (2, 4)
+    assert bool(jnp.all((toks >= 0) & (toks < cfg.padded_vocab)))
+
+
+def test_deterministic_training_given_seed():
+    pol = QuantPolicy.fqt("bhq", 6, bhq_block=16)
+    _, a = _final_loss(pol, steps=10, seed=5)
+    _, b = _final_loss(pol, steps=10, seed=5)
+    assert a == b

@@ -1,0 +1,186 @@
+"""Validation of the paper's theoretical claims (Theorems 1 & 2, Sec. 3.3).
+
+These tests ARE the faithful-reproduction evidence for the paper's math:
+unbiasedness, the variance decomposition, the 4x-per-bit law, and the
+PTQ > PSQ > BHQ variance ordering (DESIGN.md Sec. 7 experiment index).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (QuantPolicy, bhq_variance_bound, fqt_matmul,
+                        psq_variance_bound, ptq_variance_bound,
+                        quantize_bhq_stoch, quantize_psq_stoch,
+                        quantize_ptq_stoch)
+from repro.core.theory import (empirical_mean_and_variance,
+                               fqt_gradient_stats, theorem2_path_norms)
+
+
+def sparse_outlier_grad(key, n=128, d=64, outliers=4, ratio=1e3):
+    """The paper's regime (Fig. 4): most rows near zero, few outliers."""
+    g = jax.random.normal(key, (n, d)) * (1.0 / ratio)
+    return g.at[:outliers].mul(ratio)
+
+
+QUANTS = {
+    "ptq": lambda x, k, b: quantize_ptq_stoch(x, k, b).dequant(),
+    "psq": lambda x, k, b: quantize_psq_stoch(x, k, b).dequant(),
+    "bhq": lambda x, k, b: quantize_bhq_stoch(x, k, b).dequant(),
+}
+
+
+# ---------------------------------------------------------------------------
+# Theorem 1: unbiasedness
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quant", list(QUANTS))
+def test_quantizer_unbiased(quant):
+    g = sparse_outlier_grad(jax.random.PRNGKey(0))
+    fn = jax.jit(lambda x, k: QUANTS[quant](x, k, 4))
+    mean, var = empirical_mean_and_variance(fn, g, jax.random.PRNGKey(1),
+                                            n_samples=1024)
+    # per-entry SEM bound: sqrt(max per-entry var / n); allow 5 sigma
+    sem = jnp.sqrt(var / g.size / 1024)
+    assert float(jnp.max(jnp.abs(mean - g))) < 5 * float(jnp.sqrt(var)) / 8, \
+        f"{quant} biased beyond sampling noise"
+    # mean bias across entries should be tiny relative to signal
+    assert float(jnp.mean(jnp.abs(mean - g))) < 0.05 * float(jnp.max(jnp.abs(g)))
+
+
+def test_fqt_gradient_unbiased_end_to_end():
+    """Theorem 1 through a 2-layer net: E[FQT grad | B] == QAT grad."""
+    key = jax.random.PRNGKey(7)
+    kx, k1, k2 = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (16, 8))
+    w1 = jax.random.normal(k1, (8, 8)) * 0.5
+    w2 = jax.random.normal(k2, (8, 4)) * 0.5
+    fqt = QuantPolicy.fqt("bhq", 4, bhq_block=16)
+    qat = QuantPolicy.qat()
+
+    def loss(w1_, w2_, pol, k):
+        h = jax.nn.relu(fqt_matmul(x, w1_, k, pol))
+        y = fqt_matmul(h, w2_, jax.random.fold_in(k, 1), pol)
+        return jnp.sum(y ** 2)
+
+    qat_grad = jax.grad(loss, (0, 1))(w1, w2, qat, jax.random.PRNGKey(0))
+    stats = fqt_gradient_stats(
+        lambda k: jax.grad(loss, (0, 1))(w1, w2, fqt, k),
+        jax.random.PRNGKey(3), n_samples=512)
+    for m, q in zip(stats["mean"], qat_grad):
+        scale = float(jnp.max(jnp.abs(q))) + 1e-6
+        sem = float(jnp.sqrt(stats["variance"] / q.size / 512))
+        assert float(jnp.max(jnp.abs(m - q))) < max(6 * sem, 0.02 * scale)
+
+
+# ---------------------------------------------------------------------------
+# Variance: bounds, ordering, 4x-per-bit
+# ---------------------------------------------------------------------------
+
+def test_variance_bounds_hold():
+    g = sparse_outlier_grad(jax.random.PRNGKey(2))
+    key = jax.random.PRNGKey(3)
+    for bits in (3, 5, 8):
+        _, v = empirical_mean_and_variance(
+            jax.jit(lambda x, k: QUANTS["ptq"](x, k, bits)), g, key, 256)
+        assert float(v) <= float(ptq_variance_bound(g, bits)) * 1.05
+        _, v = empirical_mean_and_variance(
+            jax.jit(lambda x, k: QUANTS["psq"](x, k, bits)), g, key, 256)
+        assert float(v) <= float(psq_variance_bound(g, bits)) * 1.05
+        qt = quantize_bhq_stoch(g, key, bits)
+        _, v = empirical_mean_and_variance(
+            jax.jit(lambda x, k: QUANTS["bhq"](x, k, bits)), g, key, 256)
+        assert float(v) <= float(bhq_variance_bound(qt)) * 1.2
+
+
+def test_variance_ordering_bhq_psq_ptq():
+    """Fig. 3(a) / Sec. 4: Var BHQ < Var PSQ < Var PTQ on sparse grads."""
+    g = sparse_outlier_grad(jax.random.PRNGKey(4))
+    key = jax.random.PRNGKey(5)
+    var = {}
+    for name in QUANTS:
+        _, v = empirical_mean_and_variance(
+            jax.jit(lambda x, k, n=name: QUANTS[n](x, k, 4)), g, key, 256)
+        var[name] = float(v)
+    assert var["bhq"] < var["psq"] < var["ptq"]
+    assert var["psq"] < 0.25 * var["ptq"], "PSQ gain should be large here"
+    assert var["bhq"] < 0.5 * var["psq"], "BHQ gain should be large here"
+
+
+def test_four_x_variance_per_bit():
+    """Sec. 3.3: each fewer bit multiplies quantizer variance by ~4."""
+    g = jax.random.normal(jax.random.PRNGKey(6), (64, 32))
+    key = jax.random.PRNGKey(7)
+    vs = []
+    for bits in (6, 5, 4, 3):
+        _, v = empirical_mean_and_variance(
+            jax.jit(lambda x, k, b=bits: QUANTS["ptq"](x, k, b)), g, key, 512)
+        vs.append(float(v))
+    for lo, hi in zip(vs[:-1], vs[1:]):
+        assert 2.5 < hi / lo < 6.0, f"4x-per-bit law violated: {vs}"
+
+
+def test_bhq_single_outlier_scaling():
+    """Sec. 4.2 extreme case: BHQ variance ~ O(lambda1^2/N) vs PSQ O(lambda1^2)."""
+    key = jax.random.PRNGKey(8)
+    g = jax.random.normal(key, (128, 32)) * 1e-4
+    g = g.at[0].mul(1e4)
+    kk = jax.random.PRNGKey(9)
+    _, v_psq = empirical_mean_and_variance(
+        jax.jit(lambda x, k: QUANTS["psq"](x, k, 4)), g, kk, 256)
+    _, v_bhq = empirical_mean_and_variance(
+        jax.jit(lambda x, k: QUANTS["bhq"](x, k, 4)), g, kk, 256)
+    # O(1/N) spread: expect close to an order of magnitude at N=128
+    assert float(v_bhq) < float(v_psq) / 5.0
+
+
+# ---------------------------------------------------------------------------
+# Theorem 2: variance decomposition on a tiny MLP
+# ---------------------------------------------------------------------------
+
+def test_theorem2_upper_bound():
+    """Empirical Var[FQT grad | B] <= sum_l Var[Q_b(g_l)] * sum_k ||gamma||^2
+    (Eq. 8), with exact Jacobian path norms on a tiny linear chain."""
+    key = jax.random.PRNGKey(10)
+    kx, k1, k2 = jax.random.split(key, 3)
+    x = jax.random.normal(kx, (4, 3))
+    params = [jax.random.normal(k1, (3, 3)) * 0.7,
+              jax.random.normal(k2, (3, 2)) * 0.7]
+    layer_fns = [lambda h, w: h @ w, lambda h, w: h @ w]
+    weights = theorem2_path_norms(layer_fns, params, x)   # per-layer gamma sums
+
+    pol = QuantPolicy.fqt("ptq", 3)
+
+    def loss(ws, k):
+        h = fqt_matmul(x, ws[0], k, pol)
+        y = fqt_matmul(h, ws[1], jax.random.fold_in(k, 1), pol)
+        return jnp.sum(y)
+
+    stats = fqt_gradient_stats(lambda k: jax.grad(loss)(params, k),
+                               jax.random.PRNGKey(11), n_samples=512)
+    empirical = float(stats["variance"])
+
+    # quantizer variances of the actual backward gradients (QAT reference)
+    qat = QuantPolicy.qat()
+    def qat_loss(ws, k):
+        h = fqt_matmul(x, ws[0], k, qat)
+        y = fqt_matmul(h, ws[1], jax.random.fold_in(k, 1), qat)
+        return jnp.sum(y)
+    # activation grads at each layer via jvp bookkeeping: use vjp intermediates
+    # crude but sufficient: bound quantizer variance by Eq. 9 on observed grads
+    h1 = x @ params[0]
+    g2 = jnp.ones((4, 2))                                 # dL/dy for sum loss
+    g1 = g2 @ params[1].T
+    bound = (float(ptq_variance_bound(g2, 3)) * float(weights[1])
+             + float(ptq_variance_bound(g1, 3)) * float(weights[0]))
+    # Eq. 8 upper bound must hold with slack (plus Q_b1 contributions, which
+    # the bound's derivation also covers via the wgrad path at 8 bits: small)
+    assert empirical <= bound * 1.5 + 1e-3, (empirical, bound)
+
+
+def test_qat_equals_exact_when_disabled():
+    x = jax.random.normal(jax.random.PRNGKey(0), (8, 4))
+    w = jax.random.normal(jax.random.PRNGKey(1), (4, 4))
+    y_exact = fqt_matmul(x, w, jax.random.PRNGKey(2), QuantPolicy.exact())
+    assert jnp.allclose(y_exact, x @ w)
