@@ -1,50 +1,103 @@
-"""Kernel micro-benchmarks.
+"""Kernel micro-benchmarks — forward AND backward GEMM paths.
 
 On this CPU container the Pallas kernels execute in interpret mode (Python
 emulation — wall time is meaningless for TPU), so the timed entries are the
-XLA-compiled reference paths; the Pallas kernels are validated for
-correctness in tests/test_kernels.py and characterized here by their static
-VMEM/arithmetic-intensity properties (the quantities that matter on the
-target).  Derived column: arithmetic intensity (flops/byte) of the int8 GEMM
-at that tiling.
+XLA-compiled backend paths (``native`` int8 GEMM + epilogue, same algebra as
+the Pallas kernels, via core/backend.py); the Pallas kernels are validated
+for correctness in tests/test_kernels.py + tests/test_backend.py and
+characterized here by their static VMEM/arithmetic-intensity properties
+(the quantities that matter on the target).
+
+Rows cover the three GEMMs of a training step (forward Eq. 3, dW and dX of
+Eq. 6) plus the fused gradient-quantize step, and the whole table is also
+dumped to ``BENCH_kernels.json`` so later perf PRs have a trajectory to
+beat.
 """
 
 from __future__ import annotations
 
+import json
+import os
+
 import jax
 import jax.numpy as jnp
 
-from repro.core import QuantPolicy, fqt_matmul
-from repro.kernels import ref
+from repro.core import (QuantPolicy, fqt_matmul, quantize_psq_stoch,
+                        quantize_ptq_det, quantize_ptq_stoch, qt_gemm_nt,
+                        qt_gemm_tn)
 
 from .common import time_us
+
+BENCH_JSON = os.environ.get("BENCH_KERNELS_JSON", "BENCH_kernels.json")
+
+SHAPES = [(512, 1024, 1024), (1024, 4096, 1024), (4096, 1024, 4096)]
+
+
+def _bwd_gemms(xq, wq, g, key, quant: str, backend: str):
+    """The two backward GEMMs exactly as _fqt_bwd runs them.
+
+    xq/wq are the forward-pass residuals (already quantized) — the timed
+    region covers only what the backward actually executes: the gradient
+    quantizers plus the two GEMMs.
+    """
+    k1, k2 = jax.random.split(key)
+    gq1 = quantize_ptq_stoch(g, k1, 8)
+    gq2 = (quantize_ptq_stoch(g, k2, 8) if quant == "ptq"
+           else quantize_psq_stoch(g, k2, 8))
+    dw = qt_gemm_tn(xq, gq1, backend=backend)
+    dx = qt_gemm_nt(gq2, wq, backend=backend)
+    return dw, dx
 
 
 def run():
     rows = []
     key = jax.random.PRNGKey(0)
-    for (m, k, n) in [(512, 1024, 1024), (1024, 4096, 1024),
-                      (4096, 1024, 4096)]:
+    for (m, k, n) in SHAPES:
         x = jax.random.normal(key, (m, k))
         w = jax.random.normal(jax.random.fold_in(key, 1), (k, n)) * 0.1
+        g = jax.random.normal(jax.random.fold_in(key, 2), (m, n))
 
         t_f32 = time_us(jax.jit(lambda a, b: a @ b), x, w, iters=5)
         rows.append((f"kernel/f32_gemm/{m}x{k}x{n}", t_f32, 0.0))
 
-        pol = QuantPolicy.fqt("psq", 8, mode="native")
+        pol = QuantPolicy.fqt("psq", 8, backend="native")
         t_q8 = time_us(jax.jit(
             lambda a, b: fqt_matmul(a, b, key, pol)), x, w, iters=5)
         rows.append((f"kernel/native_q8_fqt_fwd/{m}x{k}x{n}", t_q8,
                      t_q8 / t_f32))
+
+        # backward: both GEMMs of Eq. 6 through the backend seam
+        # (xq/wq precomputed — in training they are forward residuals)
+        xq = jax.jit(quantize_ptq_det, static_argnums=1)(x, 8)
+        wq = jax.jit(quantize_ptq_det, static_argnums=1)(w, 8)
+        t_f32_bwd = time_us(jax.jit(
+            lambda a, b, c: (a.T @ c, c @ b.T)), x, w, g, iters=5)
+        rows.append((f"kernel/f32_gemm_bwd/{m}x{k}x{n}", t_f32_bwd, 0.0))
+        t_q8_bwd = time_us(jax.jit(
+            lambda a, b, c: _bwd_gemms(a, b, c, key, "psq", "native")),
+            xq, wq, g, iters=5)
+        rows.append((f"kernel/native_q8_fqt_bwd/{m}x{k}x{n}", t_q8_bwd,
+                     t_q8_bwd / t_f32_bwd))
 
         # arithmetic intensity of the int8 GEMM tile (TPU target property):
         # flops = 2 m k n; bytes = m k + k n (int8) + 4 m n (f32 out)
         fl = 2.0 * m * k * n
         by = m * k + k * n + 4.0 * m * n
         rows.append((f"kernel/q8_arith_intensity/{m}x{k}x{n}", 0.0, fl / by))
+        # backward: dW = xqᵀ(k x m) @ gq1(m x n) and dX = gq2(m x n) @ wqᵀ(n x k)
+        # int8 reads: xq (mk) + wq (kn) + the two quantized grads (2mn);
+        # f32 writes: dW (kn) + dX (mk)
+        fl_b = 2.0 * k * m * n + 2.0 * m * n * k
+        by_b = (m * k + k * n + 2.0 * m * n) + 4.0 * (k * n + m * k)
+        rows.append((f"kernel/q8_bwd_arith_intensity/{m}x{k}x{n}", 0.0,
+                     fl_b / by_b))
 
     # per-tile VMEM budget of the shipped tiling (128x512x512)
     bm, bn, bk = 128, 512, 512
     vmem = bm * bk + bk * bn + 4 * bm * bn + 4 * (2 * bm + 3 * bn)
     rows.append(("kernel/q8_tile_vmem_bytes", 0.0, float(vmem)))
+
+    with open(BENCH_JSON, "w") as f:
+        json.dump({name: {"us_per_call": us, "derived": derived}
+                   for name, us, derived in rows}, f, indent=1)
     return rows

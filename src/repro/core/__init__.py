@@ -1,22 +1,30 @@
 """StatQuant core: the paper's contribution as a composable JAX module."""
 
+from .backend import (BACKENDS, affine_factors, apply_epilogue,
+                      epilogue_coeffs, q8_gemm, qt_gemm, qt_gemm_nt,
+                      qt_gemm_tn, quantize_sr_rows_qt, quantize_sr_tensor_qt,
+                      resolve_interpret)
 from .bhq import BHQTensor, bhq_variance_bound, quantize_bhq_stoch
 from .compression import (compressed_grad_allreduce, compressed_psum,
                           compression_variance_bound)
-from .fqt import fqt_matmul, qdot
+from .fqt import fqt_matmul
 from .policy import EXACT, FQT8_BHQ, QAT, QuantPolicy
 from .quantizers import (QTensor, dynamic_range, num_bins,
                          psq_variance_bound, ptq_variance_bound,
                          quantize_psq_stoch, quantize_ptq_det,
-                         quantize_ptq_stoch, row_dynamic_range,
+                         quantize_ptq_stoch, row_dynamic_range, sr_uniform,
                          sr_variance_exact, stochastic_round)
 
 __all__ = [
     "BHQTensor", "QTensor", "QuantPolicy", "EXACT", "QAT", "FQT8_BHQ",
-    "fqt_matmul", "qdot", "num_bins", "dynamic_range", "row_dynamic_range",
-    "stochastic_round", "quantize_ptq_det", "quantize_ptq_stoch",
-    "quantize_psq_stoch", "quantize_bhq_stoch",
+    "fqt_matmul", "num_bins", "dynamic_range", "row_dynamic_range",
+    "sr_uniform", "stochastic_round", "quantize_ptq_det",
+    "quantize_ptq_stoch", "quantize_psq_stoch", "quantize_bhq_stoch",
     "ptq_variance_bound", "psq_variance_bound", "bhq_variance_bound",
     "sr_variance_exact", "compressed_psum", "compressed_grad_allreduce",
     "compression_variance_bound",
+    # backend seam (core/backend.py — the single source of epilogue algebra)
+    "BACKENDS", "resolve_interpret", "affine_factors", "epilogue_coeffs",
+    "apply_epilogue", "q8_gemm", "qt_gemm", "qt_gemm_tn", "qt_gemm_nt",
+    "quantize_sr_rows_qt", "quantize_sr_tensor_qt",
 ]

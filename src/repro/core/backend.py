@@ -1,0 +1,234 @@
+"""Pluggable quantized-GEMM execution backend: simulate | native | pallas.
+
+This module is the *single source* of the affine-epilogue algebra that turns
+integer GEMM accumulators back into real values (previously duplicated
+between ``core/fqt.py:qdot`` and ``kernels/ops.py:fused_qlinear`` with two
+incompatible code layouts).  The canonical code layout is the unsigned
+``QTensor`` one (codes in ``[0, 2^b-1]``, uint8); the MXU consumes
+shifted-signed codes ``c8 = codes - 2^(b-1)`` and the conversion happens
+exactly once, at this boundary (``QTensor.int8_codes`` /
+``QTensor.from_int8``).
+
+Writing each affine operand over shifted-signed codes,
+
+    A-hat_ik = alpha_a,i * a8_ik + beta_a,i     (per-row or per-tensor)
+    B-hat_kj = alpha_b   * b8_kj + beta_b       (per-tensor)
+
+the exact product expands into the one epilogue form every quantized GEMM of
+the paper produces (forward Eq. 3 and both backward GEMMs of Eq. 6):
+
+    (A-hat B-hat)_ij = acc_ij*rs_i*cs_j + r2_i*u_j + a_i + b_j
+
+    rs_i = alpha_a,i                   cs_j = alpha_b
+    r2_i = beta_a,i                    u_j  = alpha_b*colsum(b8)_j + K*beta_b
+    a_i  = alpha_a,i*beta_b*rowsum(a8)_i          b_j = bias (free slot)
+
+Three backends evaluate the same algebra:
+
+  ``simulate``  quantize-dequantize fp32 matmul — the paper's GPU simulation
+                (App. E), used for accuracy/variance experiments.
+  ``native``    ``lax.dot_general(int8, int8, preferred_element_type=int32)``
+                (TPU MXU int8 through XLA) + the epilogue as jnp ops.
+  ``pallas``    the fused Pallas TPU kernel (``kernels/q8_matmul.py``):
+                int32 accumulation and the epilogue in one VMEM-resident
+                pass.  ``interpret=True`` emulates on CPU.
+
+All three are dispatched from the ``_fqt`` custom_vjp (core/fqt.py), so the
+*same* quantizer algebra drives the full training step — including the BHQ
+``S^{-1}`` epilogue of ``BHQTensor.dequant_epilogue`` on the dX GEMM — not
+just a forward benchmark.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Union
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.q8_matmul import q8_matmul
+from ..kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
+from .bhq import BHQTensor
+from .policy import BACKENDS
+from .quantizers import QTensor
+
+__all__ = [
+    "BACKENDS", "resolve_interpret", "affine_factors", "epilogue_coeffs",
+    "apply_epilogue", "q8_gemm", "qt_gemm", "qt_gemm_tn", "qt_gemm_nt",
+    "quantize_sr_rows_qt", "quantize_sr_tensor_qt",
+]
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """Pallas interpret mode: explicit policy knob, else CPU/GPU => emulate."""
+    if interpret is not None:
+        return interpret
+    return jax.default_backend() != "tpu"
+
+
+# ---------------------------------------------------------------------------
+# The affine-epilogue algebra (single source)
+# ---------------------------------------------------------------------------
+
+def affine_factors(scale, zero, bits: int):
+    """(alpha, beta) with ``x-hat = alpha*c8 + beta`` for shifted codes c8.
+
+    ``x-hat = codes/scale + zero`` and ``c8 = codes - 2^(b-1)``, hence
+    ``alpha = 1/scale`` and ``beta = 2^(b-1)/scale + zero``.  Shapes follow
+    scale/zero: scalar (per-tensor) or (rows, 1) (per-sample).
+    """
+    off = 1 << (bits - 1)
+    alpha = 1.0 / jnp.asarray(scale, jnp.float32)
+    beta = off * alpha + jnp.asarray(zero, jnp.float32)
+    return alpha, beta
+
+
+def _vec(v, n: int) -> jax.Array:
+    """Normalize a scalar / (n,) / (n,1) coefficient to a (n,) f32 vector."""
+    v = jnp.asarray(v, jnp.float32).reshape(-1)
+    return v if v.shape[0] == n else jnp.broadcast_to(v, (n,))
+
+
+def epilogue_coeffs(a8: jax.Array, alpha_a, beta_a,
+                    b8: jax.Array, alpha_b, beta_b, bias=None):
+    """The epilogue coefficient vectors (rs, cs, r2, u, a, b).
+
+    a8: (M, K) shifted int8 codes, per-row (or per-tensor) affine factors;
+    b8: (K, N) shifted int8 codes, *per-tensor* factors (the transpose of a
+    per-tensor operand is still per-tensor, which is what lets the same form
+    serve A@B, A.T@B and A@B.T).  ``bias`` fills the free b_j slot.
+    """
+    m, kdim = a8.shape
+    n = b8.shape[1]
+    alpha_b = jnp.asarray(alpha_b, jnp.float32).reshape(())
+    beta_b = jnp.asarray(beta_b, jnp.float32).reshape(())
+    rowsum = jnp.sum(a8.astype(jnp.int32), axis=1).astype(jnp.float32)
+    colsum = jnp.sum(b8.astype(jnp.int32), axis=0).astype(jnp.float32)
+    rs = _vec(alpha_a, m)
+    r2 = _vec(beta_a, m)
+    cs = jnp.broadcast_to(alpha_b, (n,))
+    u = alpha_b * colsum + float(kdim) * beta_b
+    a = rs * beta_b * rowsum
+    b = jnp.zeros((n,), jnp.float32) if bias is None else _vec(bias, n)
+    return rs, cs, r2, u, a, b
+
+
+def apply_epilogue(acc: jax.Array, rs, cs, r2, u, a, b) -> jax.Array:
+    """out[i,j] = acc[i,j]*rs_i*cs_j + r2_i*u_j + a_i + b_j (f32)."""
+    return (acc * rs[:, None] * cs[None, :]
+            + r2[:, None] * u[None, :] + a[:, None] + b[None, :])
+
+
+# ---------------------------------------------------------------------------
+# Code-level GEMM dispatch
+# ---------------------------------------------------------------------------
+
+def q8_gemm(a8: jax.Array, alpha_a, beta_a, b8: jax.Array, alpha_b, beta_b,
+            *, backend: str, interpret: Optional[bool] = None,
+            bias=None) -> jax.Array:
+    """fp32 value of ``A-hat @ B-hat`` from shifted int8 codes."""
+    coeffs = epilogue_coeffs(a8, alpha_a, beta_a, b8, alpha_b, beta_b, bias)
+    if backend == "pallas":
+        return q8_matmul(a8, b8, *coeffs, interpret=resolve_interpret(interpret))
+    if backend == "native":
+        acc = jax.lax.dot_general(
+            a8, b8, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.int32).astype(jnp.float32)
+        return apply_epilogue(acc, *coeffs)
+    raise ValueError(f"unknown int-GEMM backend {backend!r}; "
+                     f"expected one of {BACKENDS[1:]}")
+
+
+# ---------------------------------------------------------------------------
+# QTensor-level GEMMs — the three GEMMs of the FQT step
+# ---------------------------------------------------------------------------
+
+def _codes2d(qt: QTensor) -> jax.Array:
+    return qt.int8_codes.reshape(-1, qt.shape[-1])
+
+
+def qt_gemm(aq: QTensor, bq: QTensor, *, backend: str,
+            interpret: Optional[bool] = None) -> jax.Array:
+    """Forward GEMM  ``A-hat @ B-hat``  (Eq. 3: ``Q_f(X) @ Q_theta(W)``)."""
+    if backend == "simulate":
+        return _codes_dequant2d(aq) @ _codes_dequant2d(bq)
+    alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
+    alpha_b, beta_b = affine_factors(bq.scale, bq.zero, bq.bits)
+    return q8_gemm(_codes2d(aq), alpha_a, beta_a, _codes2d(bq),
+                   alpha_b, beta_b, backend=backend, interpret=interpret)
+
+
+def qt_gemm_tn(aq: QTensor, bq: QTensor, *, backend: str,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Weight-grad GEMM  ``A-hat.T @ B-hat``  (``Q_f(X).T @ Q_b1(dY)``).
+
+    Both operands per-tensor (the paper's Q_b1 recipe), so transposing A
+    keeps the factors scalar.
+    """
+    if backend == "simulate":
+        return _codes_dequant2d(aq).T @ _codes_dequant2d(bq)
+    alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
+    alpha_b, beta_b = affine_factors(bq.scale, bq.zero, bq.bits)
+    return q8_gemm(_codes2d(aq).T, alpha_a, beta_a, _codes2d(bq),
+                   alpha_b, beta_b, backend=backend, interpret=interpret)
+
+
+def qt_gemm_nt(aq: Union[QTensor, BHQTensor], bq: QTensor, *, backend: str,
+               interpret: Optional[bool] = None) -> jax.Array:
+    """Activation-grad GEMM  ``A-hat @ B-hat.T``  (``Q_b2(dY) @ Q_theta(W).T``).
+
+    ``aq`` may be per-row (PSQ), per-tensor (PTQ) or a :class:`BHQTensor` —
+    for BHQ the ``S^{-1}`` epilogue commutes with the right-matmul
+    (DESIGN.md Sec. 3): ``Q_b(g) @ B-hat.T = S^{-1}((codes + Z) @ B-hat.T)``,
+    so the int GEMM runs on raw codes and ``dequant_epilogue`` mixes the
+    *output* rows afterwards.
+    """
+    if backend == "simulate":
+        a = aq.dequant()
+        return (a.reshape(-1, a.shape[-1])
+                @ _codes_dequant2d(bq).T)
+    bt8 = _codes2d(bq).T
+    alpha_b, beta_b = affine_factors(bq.scale, bq.zero, bq.bits)
+    if isinstance(aq, BHQTensor):
+        nb, blk, _ = aq.codes.shape
+        a8 = aq.int8_codes.reshape(nb * blk, -1)
+        # Householder-domain value = codes + zero, i.e. alpha=1, beta=off+zero
+        beta_a = float(aq.int8_offset) + aq.zero.reshape(nb * blk)
+        t = q8_gemm(a8, 1.0, beta_a, bt8, alpha_b, beta_b,
+                    backend=backend, interpret=interpret)
+        t = t.reshape(nb, blk, -1)
+        return aq.dequant_epilogue(t).reshape(nb * blk, -1)
+    alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
+    return q8_gemm(_codes2d(aq), alpha_a, beta_a, bt8, alpha_b, beta_b,
+                   backend=backend, interpret=interpret)
+
+
+def _codes_dequant2d(qt) -> jax.Array:
+    d = qt.dequant()
+    return d.reshape(-1, d.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Fused backward quantizers (Pallas quantize_sr kernels -> canonical QTensor)
+# ---------------------------------------------------------------------------
+
+def quantize_sr_rows_qt(x2d: jax.Array, key: jax.Array, bits: int,
+                        interpret: Optional[bool] = None) -> QTensor:
+    """PSQ stochastic quantize through the fused one-pass kernel.
+
+    Bit-identical to ``quantize_psq_stoch(x2d, key, bits)``: both draw the
+    SR uniforms as ``jax.random.bits(key, shape) * 2^-32``.
+    """
+    rbits = jax.random.bits(key, x2d.shape, jnp.uint32)
+    c8, scale, zero = quantize_sr_rows(x2d, rbits, bits,
+                                       interpret=resolve_interpret(interpret))
+    return QTensor.from_int8(c8, scale, zero, bits, x2d.shape)
+
+
+def quantize_sr_tensor_qt(x2d: jax.Array, key: jax.Array, bits: int,
+                          interpret: Optional[bool] = None) -> QTensor:
+    """PTQ stochastic quantize through the fused one-pass kernel."""
+    rbits = jax.random.bits(key, x2d.shape, jnp.uint32)
+    c8, scale, zero = quantize_sr_tensor(x2d, rbits, bits,
+                                         interpret=resolve_interpret(interpret))
+    return QTensor.from_int8(c8, scale, zero, bits, x2d.shape)

@@ -8,16 +8,15 @@ This is the paper's computational primitive.  For a linear layer
       ``dW = Q_f(X)ᵀ @ Q_b1(dY)``   Q_b1 = stochastic per-tensor PTQ (8 bit)
       ``dX = Q_b2(dY) @ Q_theta(W)ᵀ``  Q_b2 ∈ {PTQ, PSQ, BHQ} (4-8 bit)
 
-Two execution paths share the same quantizers:
-
-  * ``simulate`` — quantize-dequantize in fp32, exactly the paper's GPU
-    simulation (App. E).  Used for accuracy / variance experiments.
-  * ``native``  — the integer codes feed ``lax.dot_general(int8, int8,
-    preferred_element_type=int32)`` (TPU MXU int8) with affine zero-point
-    corrections; scales fold *after* accumulation because the paper's recipe
-    keeps them on non-contraction axes (DESIGN.md Sec. 3).  Used by the
-    dry-run / deployment so roofline FLOP & byte counts reflect real int8
-    execution.
+Execution is delegated to the pluggable backend layer (core/backend.py):
+``QuantPolicy.backend`` selects ``simulate`` (fp32 QDQ), ``native`` (XLA
+int8 dot + affine epilogue) or ``pallas`` (fused Pallas kernels) for the
+forward GEMM *and both backward GEMMs*; under ``pallas`` the backward
+quantizers Q_b1/Q_b2 additionally run through the fused one-pass
+``quantize_sr_*`` kernels (PTQ/PSQ — BHQ's grouping stays in XLA, its GEMM
+and S⁻¹ epilogue still route through the backend).  The same quantizer
+algebra drives all three backends, so they agree to fp32 tolerance
+(tests/test_backend.py).
 
 STE (Eq. 4): the backward differentiates through the *quantized* operands —
 no gradient flows into the quantizer itself.
@@ -31,12 +30,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .bhq import BHQTensor, quantize_bhq_stoch
+from .backend import (qt_gemm, qt_gemm_nt, qt_gemm_tn, quantize_sr_rows_qt,
+                      quantize_sr_tensor_qt)
+from .bhq import quantize_bhq_stoch
 from .policy import QuantPolicy
-from .quantizers import (QTensor, quantize_psq_stoch, quantize_ptq_det,
+from .quantizers import (quantize_psq_stoch, quantize_ptq_det,
                          quantize_ptq_stoch)
 
-__all__ = ["fqt_matmul", "qdot"]
+__all__ = ["fqt_matmul"]
 
 
 def _float0_like(x):
@@ -44,93 +45,30 @@ def _float0_like(x):
 
 
 # ---------------------------------------------------------------------------
-# Integer GEMM with affine corrections (native path)
+# Backward quantizer dispatch (Q_b1 / Q_b2)
 # ---------------------------------------------------------------------------
 
-def _codes_dot_f32(a_codes: jax.Array, b_codes: jax.Array,
-                   bits_a: int, bits_b: int) -> jax.Array:
-    """fp32 value of ``a_codes @ b_codes`` via an int8 MXU dot.
+def _quantize_wgrad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
+    """Q_b1: stochastic per-tensor PTQ; fused kernel under the pallas backend."""
+    if policy.backend == "pallas":
+        return quantize_sr_tensor_qt(g2d, key, policy.wgrad_bits,
+                                     policy.pallas_interpret)
+    return quantize_ptq_stoch(g2d, key, policy.wgrad_bits)
 
-    Codes are unsigned in [0, 2^b-1]; we shift by 2^(b-1) into signed int8 so
-    the accumulator stays within int32 even at K ~ 50k, then undo the shift
-    with rank-1 corrections (exact in int32, summed in fp32).
-    """
-    off_a, off_b = 1 << (bits_a - 1), 1 << (bits_b - 1)
-    a8 = (a_codes.astype(jnp.int16) - off_a).astype(jnp.int8)
-    b8 = (b_codes.astype(jnp.int16) - off_b).astype(jnp.int8)
-    acc = jax.lax.dot_general(
-        a8, b8, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.int32).astype(jnp.float32)
-    row_a = jnp.sum(a8.astype(jnp.int32), axis=1).astype(jnp.float32)   # (R,)
-    col_b = jnp.sum(b8.astype(jnp.int32), axis=0).astype(jnp.float32)   # (M,)
-    k = a_codes.shape[1]
-    return (acc + off_b * row_a[:, None] + off_a * col_b[None, :]
-            + float(k * off_a * off_b))
-
-
-def qdot(a_codes, a_scale, a_zero, bits_a,
-         b_codes, b_scale, b_zero, bits_b) -> jax.Array:
-    """``Â @ B̂`` for affine-quantized operands, int8 GEMM main term.
-
-    ``Â = a_codes/a_scale + a_zero`` with a_scale/a_zero scalar or (R, 1);
-    ``B̂ = b_codes/b_scale + b_zero`` with b_scale/b_zero scalar (per-tensor).
-
-        Â B̂ = [Ca Cb]/(sa sb) + za*colsum(Cb)/sb + zb*rowsum(Ca)/sa + K za zb
-    """
-    k = a_codes.shape[1]
-    main = _codes_dot_f32(a_codes, b_codes, bits_a, bits_b)
-    col_b = jnp.sum(b_codes.astype(jnp.float32), axis=0)        # (M,)
-    row_a = jnp.sum(a_codes.astype(jnp.float32), axis=1)[:, None]  # (R,1)
-    a_scale = jnp.asarray(a_scale)
-    a_zero = jnp.asarray(a_zero)
-    return (main / (a_scale * b_scale)
-            + a_zero * (col_b / b_scale)[None, :]
-            + b_zero * (row_a / a_scale)
-            + k * a_zero * b_zero)
-
-
-def _qt_matmul_native(aq: QTensor, bq: QTensor) -> jax.Array:
-    """Â @ B̂ for two QTensors (a may be per-row; b must be per-tensor)."""
-    a2 = aq.codes.reshape(-1, aq.shape[-1])
-    return qdot(a2, aq.scale, aq.zero, aq.bits,
-                bq.codes, bq.scale, bq.zero, bq.bits)
-
-
-def _qt_matmul_tn_native(aq: QTensor, bq: QTensor) -> jax.Array:
-    """Âᵀ @ B̂ (contraction over rows; both per-tensor)."""
-    at = aq.codes.reshape(-1, aq.shape[-1]).T                    # (K, R)
-    return qdot(at, aq.scale, aq.zero, aq.bits,
-                bq.codes.reshape(-1, bq.shape[-1]), bq.scale, bq.zero, bq.bits)
-
-
-def _qt_matmul_nt_native(aq, bq: QTensor) -> jax.Array:
-    """Â @ B̂ᵀ where Â is a QTensor or BHQTensor, B̂ a per-tensor QTensor.
-
-    For BHQ the S^{-1} epilogue commutes with the right-matmul
-    (DESIGN.md Sec. 3): Q_b(g) @ B̂ᵀ = S^{-1}((codes + Z) @ B̂ᵀ).
-    """
-    bt = bq.codes.reshape(-1, bq.shape[-1]).T                    # (M, K)
-    if isinstance(aq, BHQTensor):
-        nb, blk, m = aq.codes.shape
-        flat = aq.codes.reshape(nb * blk, m)
-        zero = aq.zero.reshape(nb * blk, 1)
-        t = qdot(flat, jnp.float32(1.0), zero, aq.bits,
-                 bt, bq.scale, bq.zero, bq.bits)                 # (R, K)
-        t = t.reshape(nb, blk, -1)
-        return aq.dequant_epilogue(t).reshape(nb * blk, -1)
-    a2 = aq.codes.reshape(-1, aq.shape[-1])
-    return qdot(a2, aq.scale, aq.zero, aq.bits,
-                bt, bq.scale, bq.zero, bq.bits)
-
-
-# ---------------------------------------------------------------------------
-# Gradient quantizer dispatch (Q_b2)
-# ---------------------------------------------------------------------------
 
 def _quantize_grad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
+    """Q_b2 per ``policy.grad_quantizer``; PTQ/PSQ use the fused one-pass
+    kernels under the pallas backend (same codes bit-for-bit — both draw SR
+    uniforms as ``random.bits * 2^-32``)."""
     if policy.grad_quantizer == "ptq":
+        if policy.backend == "pallas":
+            return quantize_sr_tensor_qt(g2d, key, policy.grad_bits,
+                                         policy.pallas_interpret)
         return quantize_ptq_stoch(g2d, key, policy.grad_bits)
     if policy.grad_quantizer == "psq":
+        if policy.backend == "pallas":
+            return quantize_sr_rows_qt(g2d, key, policy.grad_bits,
+                                       policy.pallas_interpret)
         return quantize_psq_stoch(g2d, key, policy.grad_bits)
     return quantize_bhq_stoch(g2d, key, policy.grad_bits,
                               block_rows=policy.bhq_block)
@@ -153,10 +91,8 @@ def _fqt_fwd(policy: QuantPolicy, x, w, key):
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
     xq = quantize_ptq_det(x2, policy.act_bits)
     wq = quantize_ptq_det(w.astype(jnp.float32), policy.weight_bits)
-    if policy.mode == "native":
-        y = _qt_matmul_native(xq, wq)
-    else:
-        y = xq.dequant() @ wq.dequant()
+    y = qt_gemm(xq, wq, backend=policy.backend,
+                interpret=policy.pallas_interpret)
     return (y.reshape(*lead, w.shape[-1]).astype(dtype),
             (xq, wq, key, lead))
 
@@ -171,14 +107,12 @@ def _fqt_bwd(policy: QuantPolicy, res, g):
         dx = g2 @ wq.dequant().T
     else:
         k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
-        gq1 = quantize_ptq_stoch(g2, k1, policy.wgrad_bits)      # Q_b1
+        gq1 = _quantize_wgrad(g2, k1, policy)                    # Q_b1
         gq2 = _quantize_grad(g2, k2, policy)                     # Q_b2
-        if policy.mode == "native":
-            dw = _qt_matmul_tn_native(xq, gq1)
-            dx = _qt_matmul_nt_native(gq2, wq)
-        else:
-            dw = xq.dequant().T @ gq1.dequant()
-            dx = gq2.dequant() @ wq.dequant().T
+        dw = qt_gemm_tn(xq, gq1, backend=policy.backend,
+                        interpret=policy.pallas_interpret)
+        dx = qt_gemm_nt(gq2, wq, backend=policy.backend,
+                        interpret=policy.pallas_interpret)
     dx = dx.reshape(*lead, -1).astype(dtype)   # activation-grad in stream dtype
     return dx, dw, _float0_like(key)           # weight-grad stays fp32 (master)
 

@@ -11,19 +11,37 @@ Three canonical modes:
   ``exact()``  full-precision training        (paper's "Exact" rows)
   ``qat()``    quantized forward, FP backward (paper's "QAT" rows)
   ``fqt(...)`` fully quantized training       (paper's "b-bit FQT" rows)
+
+Orthogonally, ``backend`` picks how every quantized GEMM executes
+(core/backend.py owns the dispatch; the policy x backend matrix is fully
+crossed):
+
+  ``simulate``  fp32 quantize-dequantize matmul (the paper's GPU simulation)
+  ``native``    XLA int8 ``dot_general`` + affine epilogue (TPU MXU int8)
+  ``pallas``    fused Pallas kernels: one-pass quantize (kernels/quantize_sr)
+                and int8 GEMM + epilogue (kernels/q8_matmul) for the forward
+                AND both backward GEMMs
+
+``backend`` is the single stored field; the factory methods still accept the
+legacy ``mode=`` spelling and ``policy.mode`` reads as an alias.
+``pallas_interpret`` forces/forbids Pallas interpret mode (None = auto:
+interpret everywhere but TPU).
 """
 
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
-__all__ = ["QuantPolicy", "EXACT", "QAT", "FQT8_BHQ"]
+__all__ = ["QuantPolicy", "EXACT", "QAT", "FQT8_BHQ", "BACKENDS"]
+
+# The one backend registry — core/backend.py dispatches over the same tuple.
+BACKENDS = ("simulate", "native", "pallas")
 
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
     enabled: bool = True           # False => full-precision ("exact")
-    mode: str = "simulate"         # "simulate" (fp32 QDQ) | "native" (int8 GEMM)
     act_bits: int = 8              # Q_f bits
     weight_bits: int = 8           # Q_theta bits
     quantize_bwd: bool = True      # False => QAT (backward in full precision)
@@ -31,14 +49,27 @@ class QuantPolicy:
     grad_bits: int = 8             # Q_b2 bits
     grad_quantizer: str = "bhq"    # Q_b2 type: "ptq" | "psq" | "bhq"
     bhq_block: int = 1024          # BHQ row-block size
+    # --- execution backend (core/backend.py dispatch) ---
+    backend: str = "simulate"      # "simulate" | "native" | "pallas"
+    pallas_interpret: Optional[bool] = None  # None => auto (non-TPU interprets)
     # --- beyond-paper knobs ---
     compress_dp_grads: bool = False  # int8 unbiased gradient all-reduce
     dp_grad_bits: int = 8
 
     def __post_init__(self):
         assert self.grad_quantizer in ("ptq", "psq", "bhq")
-        assert self.mode in ("simulate", "native")
+        assert self.backend in BACKENDS, self.backend
         assert 2 <= self.grad_bits <= 8 and 2 <= self.act_bits <= 8
+
+    @property
+    def mode(self) -> str:
+        """Legacy alias of ``backend`` (read-only; set via the factories)."""
+        return self.backend
+
+    @staticmethod
+    def _resolve_backend(backend: str, mode: str) -> str:
+        # `mode` is the legacy spelling; an explicit `backend` wins.
+        return backend or mode or "simulate"
 
     @staticmethod
     def exact() -> "QuantPolicy":
@@ -46,18 +77,21 @@ class QuantPolicy:
 
     @staticmethod
     def qat(act_bits: int = 8, weight_bits: int = 8,
-            mode: str = "simulate") -> "QuantPolicy":
+            mode: str = "", backend: str = "", **kw) -> "QuantPolicy":
         return QuantPolicy(enabled=True, quantize_bwd=False,
-                           act_bits=act_bits, weight_bits=weight_bits, mode=mode)
+                           act_bits=act_bits, weight_bits=weight_bits,
+                           backend=QuantPolicy._resolve_backend(backend, mode),
+                           **kw)
 
     @staticmethod
     def fqt(grad_quantizer: str = "bhq", grad_bits: int = 8,
             act_bits: int = 8, weight_bits: int = 8,
-            mode: str = "simulate", **kw) -> "QuantPolicy":
+            mode: str = "", backend: str = "", **kw) -> "QuantPolicy":
         return QuantPolicy(enabled=True, quantize_bwd=True,
                            grad_quantizer=grad_quantizer, grad_bits=grad_bits,
                            act_bits=act_bits, weight_bits=weight_bits,
-                           mode=mode, **kw)
+                           backend=QuantPolicy._resolve_backend(backend, mode),
+                           **kw)
 
 
 EXACT = QuantPolicy.exact()

@@ -32,6 +32,7 @@ import jax.numpy as jnp
 __all__ = [
     "QTensor",
     "num_bins",
+    "sr_uniform",
     "stochastic_round",
     "quantize_ptq_det",
     "quantize_ptq_stoch",
@@ -87,6 +88,22 @@ class QTensor:
     def int8_offset(self) -> int:
         return 1 << (self.bits - 1)
 
+    @classmethod
+    def from_int8(cls, codes8: jax.Array, scale, zero, bits: int,
+                  shape) -> "QTensor":
+        """Boundary conversion from the kernels' shifted-signed int8 layout
+        (``c8 = code - 2^(b-1)``) to the canonical unsigned layout.
+
+        A backend GEMM consuming this tensor shifts back via ``int8_codes``;
+        the round-trip is deliberate — one canonical layout at every module
+        boundary is the invariant this refactor exists for, and the paired
+        elementwise shifts fuse into the adjacent XLA elementwise chain,
+        noise next to the O(M*N*K) GEMM they bracket."""
+        off = 1 << (bits - 1)
+        codes = (codes8.astype(jnp.int16) + off).astype(jnp.uint8)
+        return cls(codes=codes, scale=jnp.asarray(scale),
+                   zero=jnp.asarray(zero), bits=bits, shape=tuple(shape))
+
 
 def dynamic_range(x: jax.Array) -> jax.Array:
     """R(X) = max X - min X over the whole tensor (paper Sec. 3.3)."""
@@ -98,13 +115,26 @@ def row_dynamic_range(x2d: jax.Array) -> jax.Array:
     return jnp.max(x2d, axis=-1) - jnp.min(x2d, axis=-1)
 
 
+def sr_uniform(key: jax.Array, shape, dtype=jnp.float32) -> jax.Array:
+    """U[0,1) uniforms for SR, derived as ``random.bits * 2^-32``.
+
+    This is the ONE convention for SR randomness across the stack: the
+    fused Pallas quantize kernels (kernels/quantize_sr.py) take raw uint32
+    bits and apply the same ``* 2^-32`` inside, so for a given key the
+    ``simulate``/``native`` XLA quantizers and the ``pallas`` kernels emit
+    bit-identical codes.
+    """
+    bits = jax.random.bits(key, shape, jnp.uint32)
+    return bits.astype(dtype) * (1.0 / 4294967296.0)
+
+
 def stochastic_round(x: jax.Array, key: jax.Array) -> jax.Array:
     """SR(x): ceil w.p. frac(x), floor otherwise — unbiased (paper Sec. 3.3).
 
     Implemented as floor(x + u), u ~ U[0,1): E[SR(x)] = x and
     Var[SR(x)] = p(1-p) <= 1/4 (Proposition 4).
     """
-    u = jax.random.uniform(key, x.shape, dtype=x.dtype)
+    u = sr_uniform(key, x.shape, x.dtype)
     return jnp.floor(x + u)
 
 

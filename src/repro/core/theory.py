@@ -56,13 +56,17 @@ def fqt_gradient_stats(grad_fn: Callable, key: jax.Array,
     grad_fn(key) -> gradient pytree (the FQT gradient with quantizer
     randomness keyed by ``key``; the batch B is held fixed by the caller, so
     the returned stats are the *conditional-on-B* quantities of Theorems 1/2).
+
+    The sampling loop runs under ``lax.map`` so ``grad_fn`` compiles once
+    and the n_samples evaluations execute compiled (a Python loop here is
+    ~50x slower — each eager call re-dispatches every op).
     """
     keys = jax.random.split(key, n_samples)
-    grads = [grad_fn(k) for k in keys]
-    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *grads)
+    stacked = jax.lax.map(grad_fn, keys)
     mean = jax.tree.map(lambda s: jnp.mean(s, axis=0), stacked)
     var = sum(jax.tree.leaves(
-        jax.tree.map(lambda s: jnp.sum(jnp.var(s, axis=0)), stacked)))
+        jax.tree.map(lambda s: jnp.sum(jnp.var(s, axis=0), dtype=jnp.float32),
+                     stacked)))
     return {"mean": mean, "variance": var}
 
 

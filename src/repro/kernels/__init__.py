@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+  q8_matmul.py     int8 x int8 -> int32 GEMM + fused affine epilogue
+  quantize_sr.py   fused dynamic-range + scale + stochastic-round quantize
+  ops.py           wrappers wiring kernels to the quantizer algebra
+  ref.py           pure-jnp oracles (the allclose targets)
+
+NOTE: ``ops`` is intentionally NOT imported here — it depends on
+``repro.core.backend`` (which imports the kernel modules below), so eager
+import would cycle.  Use ``from repro.kernels.ops import ...``.
+"""
+
+from .q8_matmul import q8_matmul
+from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
+
+__all__ = ["q8_matmul", "quantize_sr_rows", "quantize_sr_tensor"]

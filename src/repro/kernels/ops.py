@@ -1,35 +1,33 @@
 """jit'd wrappers wiring the Pallas kernels to the paper's quantizer algebra.
 
-``fqt_linear_fwd_kernel`` computes the forward ``Q_f(X) @ Q_theta(W)`` with
-one fused int8 GEMM.  Given affine quantizations
+The affine-epilogue algebra lives in ONE place — ``core/backend.py``
+(``affine_factors`` / ``epilogue_coeffs``); these wrappers only choose
+operands and kernels.  ``fused_qlinear`` keeps the historical benchmark
+contract (per-row stochastic activation quantize + per-tensor weights);
+the *training* hot path routes through ``core.backend.qt_gemm*`` via the
+``_fqt`` custom_vjp, and ``fused_qlinear_bwd`` exposes the two backward
+GEMMs of Eq. 6 in the same standalone form for benchmarking.
 
-    X^ = (Cx + ox)/sx + zx      (per-row scale sx_i, zero zx_i; ox = 2^(b-1))
-    W^ = (Cw + ow)/sw + zw      (per-tensor)
-
-the exact product expands into the kernel's epilogue form
-out = acc*rs_i*cs_j + rs_i*u_j + a_i + b_j with
-
-    rs_i = 1/sx_i,  cs_j = 1/sw
-    u_j  = (colsum_Cw_j + K*ow)/sw * ox ... folded with zero terms (below)
-    a_i  = zx_i * K * zw + ...            (all row-only terms)
-    b_j  = zw-free col-only terms
-
-(The full derivation is in the code — each term is tagged.)  On CPU the
-kernels run under interpret=True; on TPU the same code lowers to Mosaic.
+On CPU the kernels run under interpret=True; on TPU the same code lowers
+to Mosaic.
 """
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
-from .q8_matmul import q8_matmul
-from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
+from ..core.backend import (affine_factors, epilogue_coeffs, qt_gemm_nt,
+                            qt_gemm_tn, quantize_sr_rows_qt,
+                            quantize_sr_tensor_qt)
+from ..core.bhq import quantize_bhq_stoch
+from ..core.quantizers import quantize_ptq_det
 from . import ref
+from .q8_matmul import q8_matmul
+from .quantize_sr import quantize_sr_rows
 
-__all__ = ["fused_qlinear", "fused_quantize_psq", "fused_quantize_ptq"]
+__all__ = ["fused_qlinear", "fused_qlinear_bwd", "fused_quantize_psq",
+           "fused_quantize_ptq"]
 
 
 def fused_qlinear(x: jax.Array, w: jax.Array, key: jax.Array,
@@ -47,7 +45,6 @@ def fused_qlinear(x: jax.Array, w: jax.Array, key: jax.Array,
     M, K = x.shape
     K2, N = w.shape
     assert K == K2
-    ox = 1 << (act_bits - 1)
     ow = 1 << (weight_bits - 1)
     Bw = (1 << weight_bits) - 1
 
@@ -61,46 +58,51 @@ def fused_qlinear(x: jax.Array, w: jax.Array, key: jax.Array,
     lo, hi = jnp.min(w), jnp.max(w)
     sw = Bw / jnp.maximum(hi - lo, 1e-12)
     cw = (jnp.clip(jnp.round(sw * (w - lo)), 0, Bw) - ow).astype(jnp.int8)
-    zw = lo
 
-    # Factor both operands affinely (kernel docstring):
-    #   X^_ik = ax_i*Cx_ik + bx_i,   ax = 1/sx,  bx = ox/sx + zx
-    #   W^_kj = aw  *Cw_kj + bw,     aw = 1/sw,  bw = ow/sw + zw
-    # =>  X^W^ = (ax aw) CxCw + ax bw rowsum(Cx) + bx (aw colsum(Cw) + K bw)
-    colsum_cw = jnp.sum(cw.astype(jnp.int32), axis=0).astype(jnp.float32)
-    rowsum_cx = jnp.sum(cx.astype(jnp.int32), axis=1).astype(jnp.float32)
-    ax = 1.0 / sx[:, 0]                                        # (M,)
-    bx = ox * ax + zx[:, 0]                                    # (M,)
-    aw = 1.0 / sw
-    bw = ow * aw + zw
-    rs, cs = ax, jnp.full((N,), aw, jnp.float32)
-    r2, u = bx, aw * colsum_cw + K * bw
-    a = ax * bw * rowsum_cx
-    b = jnp.zeros((N,), jnp.float32)                           # free: bias slot
-
+    ax, bx = affine_factors(sx, zx, act_bits)          # per-row (M, 1)
+    aw, bw = affine_factors(sw, lo, weight_bits)       # per-tensor scalars
+    coeffs = epilogue_coeffs(cx, ax, bx, cw, aw, bw)
     if use_kernels:
-        y = q8_matmul(cx, cw, rs, cs, r2, u, a, b, interpret=interpret)
+        y = q8_matmul(cx, cw, *coeffs, interpret=interpret)
     else:
-        y = ref.q8_matmul_ref(cx, cw, rs, cs, r2, u, a, b)
+        y = ref.q8_matmul_ref(cx, cw, *coeffs)
     return y, {"cx": cx, "cw": cw, "sx": sx, "sw": sw}
+
+
+def fused_qlinear_bwd(x: jax.Array, w: jax.Array, g: jax.Array,
+                      key: jax.Array, act_bits: int = 8, weight_bits: int = 8,
+                      wgrad_bits: int = 8, grad_bits: int = 8,
+                      grad_quantizer: str = "psq", bhq_block: int = 1024,
+                      interpret: bool = True):
+    """Both backward GEMMs of Eq. 6 through the fused Pallas kernels.
+
+        dW = Q_f(X)ᵀ @ Q_b1(dY)      (Q_b1: fused per-tensor SR quantize)
+        dX = Q_b2(dY) @ Q_theta(W)ᵀ  (Q_b2: ptq | psq fused SR / bhq + S⁻¹)
+
+    Standalone benchmark form of what ``_fqt_bwd`` runs per training step.
+    """
+    k1, k2 = jax.random.split(key)
+    xq = quantize_ptq_det(x, act_bits)
+    wq = quantize_ptq_det(w, weight_bits)
+    gq1 = quantize_sr_tensor_qt(g, k1, wgrad_bits, interpret)
+    if grad_quantizer == "ptq":
+        gq2 = quantize_sr_tensor_qt(g, k2, grad_bits, interpret)
+    elif grad_quantizer == "psq":
+        gq2 = quantize_sr_rows_qt(g, k2, grad_bits, interpret)
+    else:
+        gq2 = quantize_bhq_stoch(g, k2, grad_bits, block_rows=bhq_block)
+    dw = qt_gemm_tn(xq, gq1, backend="pallas", interpret=interpret)
+    dx = qt_gemm_nt(gq2, wq, backend="pallas", interpret=interpret)
+    return dw, dx
 
 
 def fused_quantize_psq(g: jax.Array, key: jax.Array, bits: int,
                        interpret: bool = True):
     """PSQ gradient quantize via the fused kernel; returns dequantized g
     (simulate path) — used by benchmarks to measure kernel-vs-ref parity."""
-    M, N = g.shape
-    rbits = jax.random.bits(key, (M, N), jnp.uint32)
-    codes, scale, zero = quantize_sr_rows(g, rbits, bits, interpret=interpret)
-    off = (1 << bits) // 2
-    return (codes.astype(jnp.float32) + off) / scale + zero
+    return quantize_sr_rows_qt(g, key, bits, interpret).dequant()
 
 
 def fused_quantize_ptq(g: jax.Array, key: jax.Array, bits: int,
                        interpret: bool = True):
-    M, N = g.shape
-    rbits = jax.random.bits(key, (M, N), jnp.uint32)
-    codes, scale, zero = quantize_sr_tensor(g, rbits, bits,
-                                            interpret=interpret)
-    off = (1 << bits) // 2
-    return (codes.astype(jnp.float32) + off) / scale + zero
+    return quantize_sr_tensor_qt(g, key, bits, interpret).dequant()

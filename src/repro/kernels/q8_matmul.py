@@ -29,6 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
+from .tiling import pad2d as _pad2, round_up as _round_up
+
 __all__ = ["q8_matmul"]
 
 
@@ -55,18 +57,29 @@ def q8_matmul(x8: jax.Array, y8: jax.Array, rs: jax.Array, cs: jax.Array,
               r2: jax.Array, u: jax.Array, a: jax.Array, b: jax.Array,
               bm: int = 128, bn: int = 512, bk: int = 512,
               interpret: bool = False) -> jax.Array:
-    """x8: (M,K) int8; y8: (K,N) int8; rs/r2/a: (M,); cs/u/b: (N,) -> f32."""
+    """x8: (M,K) int8; y8: (K,N) int8; rs/r2/a: (M,); cs/u/b: (N,) -> f32.
+
+    Arbitrary (M, N, K) work: tiles shrink toward small dims (keeping
+    MXU-friendly multiples), then every dim is zero-padded up to a tile
+    multiple and the result sliced back.  Zero-padding is exact — padded K
+    codes contribute 0 to the accumulator and the epilogue coefficient
+    vectors pad with zeros, so padded output rows/cols never leak.
+    """
     M, K = x8.shape
     K2, N = y8.shape
     assert K == K2
-    bm, bn, bk = min(bm, M), min(bn, N), min(bk, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0, (M, N, K, bm, bn, bk)
-    nk = K // bk
-    grid = (M // bm, N // bn, nk)
+    bm = min(bm, _round_up(M, 32))       # int8 sublane tile is 32
+    bn = min(bn, _round_up(N, 128))      # lane dim is 128
+    bk = min(bk, _round_up(K, 128))
+    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    x8 = _pad2(x8, Mp, Kp)
+    y8 = _pad2(y8, Kp, Np)
+    nk = Kp // bk
+    grid = (Mp // bm, Np // bn, nk)
 
     row = lambda i, j, k: (i, 0)
     col = lambda i, j, k: (0, j)
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_kernel, nk=nk),
         grid=grid,
         in_specs=[
@@ -77,8 +90,11 @@ def q8_matmul(x8: jax.Array, y8: jax.Array, rs: jax.Array, cs: jax.Array,
             pl.BlockSpec((bm, 1), row), pl.BlockSpec((1, bn), col),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.float32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
-    )(x8, y8, rs.reshape(M, 1), cs.reshape(1, N), r2.reshape(M, 1),
-      u.reshape(1, N), a.reshape(M, 1), b.reshape(1, N))
+    )(x8, y8,
+      _pad2(rs.reshape(M, 1), Mp, 1), _pad2(cs.reshape(1, N), 1, Np),
+      _pad2(r2.reshape(M, 1), Mp, 1), _pad2(u.reshape(1, N), 1, Np),
+      _pad2(a.reshape(M, 1), Mp, 1), _pad2(b.reshape(1, N), 1, Np))
+    return out[:M, :N]

@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from .tiling import pad_rows as _pad_rows, round_up as _round_up
+
 __all__ = ["quantize_sr_rows", "quantize_sr_tensor"]
 
 _EPS = 1e-12
@@ -49,6 +51,10 @@ def quantize_sr_rows(x: jax.Array, rbits: jax.Array, bits: int = 8,
 
     Returns (codes int8 shifted by -2^(b-1), scale (M,1), zero (M,1)):
         x ~= (codes + 2^(b-1)) / scale + zero
+
+    Arbitrary M works: rows are edge-padded up to a block multiple (each
+    padded row replicates the last real row, so its min/max stay finite)
+    and the outputs sliced back.
     """
     M, N = x.shape
     B = (1 << bits) - 1
@@ -56,8 +62,10 @@ def quantize_sr_rows(x: jax.Array, rbits: jax.Array, bits: int = 8,
     # full rows must fit VMEM: bm * N * (4 + 4 + 1) bytes
     while bm > 1 and bm * N * 9 > 8 * 2**20:
         bm //= 2
-    assert M % bm == 0, (M, bm)
-    grid = (M // bm,)
+    Mp = _round_up(M, bm)
+    xp = _pad_rows(x, Mp, edge=True)
+    rp = _pad_rows(rbits, Mp)
+    grid = (Mp // bm,)
     codes, scale, zero = pl.pallas_call(
         functools.partial(_kernel, B=B),
         grid=grid,
@@ -66,12 +74,12 @@ def quantize_sr_rows(x: jax.Array, rbits: jax.Array, bits: int = 8,
         out_specs=[pl.BlockSpec((bm, N), lambda i: (i, 0)),
                    pl.BlockSpec((bm, 1), lambda i: (i, 0)),
                    pl.BlockSpec((bm, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((M, N), jnp.int8),
-                   jax.ShapeDtypeStruct((M, 1), jnp.float32),
-                   jax.ShapeDtypeStruct((M, 1), jnp.float32)],
+        out_shape=[jax.ShapeDtypeStruct((Mp, N), jnp.int8),
+                   jax.ShapeDtypeStruct((Mp, 1), jnp.float32),
+                   jax.ShapeDtypeStruct((Mp, 1), jnp.float32)],
         interpret=interpret,
-    )(x, rbits)
-    return codes, scale, zero
+    )(xp, rp)
+    return codes[:M], scale[:M], zero[:M]
 
 
 def _tensor_kernel(x_ref, bits_ref, lo_ref, hi_ref, codes_ref, *, B: int):
@@ -86,7 +94,11 @@ def _tensor_kernel(x_ref, bits_ref, lo_ref, hi_ref, codes_ref, *, B: int):
 @functools.partial(jax.jit, static_argnames=("bits", "bm", "interpret"))
 def quantize_sr_tensor(x: jax.Array, rbits: jax.Array, bits: int = 8,
                        bm: int = 256, interpret: bool = False):
-    """Per-tensor (PTQ) fused quantize. Returns (codes, scale (), zero ())."""
+    """Per-tensor (PTQ) fused quantize. Returns (codes, scale (), zero ()).
+
+    The global min/max reduce over the *unpadded* input, so the edge
+    padding used to reach a block-multiple row count never widens the range.
+    """
     M, N = x.shape
     B = (1 << bits) - 1
     lo = jnp.min(x).reshape(1, 1)
@@ -94,17 +106,16 @@ def quantize_sr_tensor(x: jax.Array, rbits: jax.Array, bits: int = 8,
     bm = min(bm, M)
     while bm > 1 and bm * N * 9 > 8 * 2**20:
         bm //= 2
-    assert M % bm == 0
+    Mp = _round_up(M, bm)
     codes = pl.pallas_call(
         functools.partial(_tensor_kernel, B=B),
-        grid=(M // bm,),
+        grid=(Mp // bm,),
         in_specs=[pl.BlockSpec((bm, N), lambda i: (i, 0)),
                   pl.BlockSpec((bm, N), lambda i: (i, 0)),
                   pl.BlockSpec((1, 1), lambda i: (0, 0)),
                   pl.BlockSpec((1, 1), lambda i: (0, 0))],
         out_specs=pl.BlockSpec((bm, N), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int8),
+        out_shape=jax.ShapeDtypeStruct((Mp, N), jnp.int8),
         interpret=interpret,
-    )(x, rbits, lo, hi)
-    scale = B / jnp.maximum(hi[0, 0] - lo[0, 0], _EPS)
-    return codes, scale, lo[0, 0]
+    )(_pad_rows(x, Mp, edge=True), _pad_rows(rbits, Mp), lo, hi)
+    return codes[:M], B / jnp.maximum(hi[0, 0] - lo[0, 0], _EPS), lo[0, 0]

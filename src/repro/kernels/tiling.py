@@ -1,0 +1,34 @@
+"""Shared pad-and-slice helpers for the Pallas kernel wrappers.
+
+Grids require block-multiple dims; these helpers round shapes up and pad
+operands so arbitrary (ragged) inputs work, with the wrapper slicing the
+result back.  One home for the rule so a padding/alignment fix lands once.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["round_up", "pad2d", "pad_rows"]
+
+
+def round_up(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+def pad2d(z: jax.Array, rows: int, cols: int) -> jax.Array:
+    """Zero-pad a 2D array up to (rows, cols) (no-op when already there)."""
+    r, c = z.shape
+    if r == rows and c == cols:
+        return z
+    return jnp.pad(z, ((0, rows - r), (0, cols - c)))
+
+
+def pad_rows(x: jax.Array, rows: int, edge: bool = False) -> jax.Array:
+    """Pad leading dim to ``rows``; ``edge=True`` replicates the last real
+    row (keeps per-row min/max finite for quantize kernels)."""
+    if x.shape[0] == rows:
+        return x
+    mode = "edge" if edge else "constant"
+    return jnp.pad(x, ((0, rows - x.shape[0]), (0, 0)), mode=mode)

@@ -211,7 +211,7 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     """Lower + compile one cell; return the roofline record."""
     cfg = get_config(arch)
     shape = SHAPES[shape_name]
-    policy = policy or QuantPolicy.fqt("bhq", 5, mode="native",
+    policy = policy or QuantPolicy.fqt("bhq", 5, backend="native",
                                        bhq_block=1024)
     mesh = mesh if mesh is not None else make_production_mesh(
         multi_pod=multi_pod)
@@ -241,7 +241,8 @@ def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
     mf = model_flops(n_params, n_tokens,
                      "train" if shape.kind == "train" else "fwd",
                      active_frac=active_param_frac(cfg))
-    terms = roofline_terms(m["flops"], m["bytes"], m["coll"]["total"])
+    terms = roofline_terms(m["flops"], m["bytes"], m["coll"]["total"],
+                           backend=policy.backend)
     hbm_gb = (mem.argument_size_in_bytes + mem.temp_size_in_bytes
               + mem.output_size_in_bytes - mem.alias_size_in_bytes) / 2**30
     record = {
@@ -288,6 +289,9 @@ def main(argv=None):
     ap.add_argument("--out", default="experiments/dryrun")
     ap.add_argument("--quant", default="bhq")
     ap.add_argument("--grad-bits", type=int, default=5)
+    ap.add_argument("--backend", default="native",
+                    choices=["simulate", "native", "pallas"],
+                    help="quantized-GEMM execution backend (core/backend.py)")
     ap.add_argument("--no-sp", dest="sp", action="store_false")
     ap.add_argument("--no-correct", dest="correct", action="store_false")
     ap.add_argument("--skip-existing", action="store_true")
@@ -297,8 +301,8 @@ def main(argv=None):
     archs = ARCH_NAMES if args.arch == "all" else args.arch.split(",")
     meshes = {"single": [False], "multi": [True],
               "both": [False, True]}[args.mesh]
-    policy = QuantPolicy.fqt(args.quant, args.grad_bits, mode="native",
-                             bhq_block=1024)
+    policy = QuantPolicy.fqt(args.quant, args.grad_bits,
+                             backend=args.backend, bhq_block=1024)
 
     failures = []
     for arch in archs:

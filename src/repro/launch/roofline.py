@@ -20,7 +20,8 @@ from __future__ import annotations
 import re
 from typing import Dict
 
-__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops"]
+__all__ = ["HW", "collective_bytes", "roofline_terms", "model_flops",
+           "peak_for_backend"]
 
 # TPU v5e-class hardware constants (assignment-provided)
 HW = {
@@ -97,9 +98,23 @@ def model_flops(n_params: int, n_tokens: int, kind: str,
     return per_tok * n_params * active_frac * n_tokens
 
 
+def peak_for_backend(backend: str) -> float:
+    """Chip peak FLOP/s for a QuantPolicy.backend.
+
+    ``native``/``pallas`` execute the GEMMs on int8 MXU (2x bf16 peak);
+    ``simulate`` is the fp32 QDQ path, so the bf16 peak is the right
+    denominator for its compute roofline term.
+    """
+    return HW["peak_bf16"] if backend == "simulate" else HW["peak_int8"]
+
+
 def roofline_terms(flops: float, bytes_accessed: float,
-                   coll_bytes: int, int8: bool = True) -> dict:
-    peak = HW["peak_int8"] if int8 else HW["peak_bf16"]
+                   coll_bytes: int, int8: bool = True,
+                   backend: str | None = None) -> dict:
+    if backend is not None:
+        peak = peak_for_backend(backend)
+    else:
+        peak = HW["peak_int8"] if int8 else HW["peak_bf16"]
     t_c = flops / peak
     t_m = bytes_accessed / HW["hbm_bw"]
     t_n = coll_bytes / HW["link_bw"]

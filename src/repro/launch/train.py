@@ -131,15 +131,20 @@ def main(argv=None):
     ap.add_argument("--quant", default="bhq", choices=["ptq", "psq", "bhq",
                                                        "qat", "exact"])
     ap.add_argument("--grad-bits", type=int, default=5)
+    ap.add_argument("--backend", default="simulate",
+                    choices=["simulate", "native", "pallas"],
+                    help="quantized-GEMM execution backend (core/backend.py);"
+                         " pallas = fused kernels for fwd AND both bwd GEMMs")
     ap.add_argument("--ckpt-dir", default=None)
     args = ap.parse_args(argv)
 
     if args.quant == "exact":
         policy = QuantPolicy.exact()
     elif args.quant == "qat":
-        policy = QuantPolicy.qat()
+        policy = QuantPolicy.qat(backend=args.backend)
     else:
-        policy = QuantPolicy.fqt(args.quant, args.grad_bits, bhq_block=256)
+        policy = QuantPolicy.fqt(args.quant, args.grad_bits, bhq_block=256,
+                                 backend=args.backend)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     prm = PreemptionHandler(install=True)

@@ -35,7 +35,13 @@ def init_dense(key, d_in: int, d_out: int, bias: bool = False,
 
 def dense(p: dict, x: jax.Array, key: jax.Array, policy: QuantPolicy,
           tag: int = 0) -> jax.Array:
-    """FQT linear layer: the paper's quantized GEMM + fp bias add."""
+    """FQT linear layer: the paper's quantized GEMM + fp bias add.
+
+    The GEMM executes on whichever backend ``policy.backend`` selects
+    (simulate / native / pallas — core/backend.py), so every model layer
+    built on ``dense`` trains on the fused Pallas kernels when asked to;
+    nothing at this level knows about code layouts or epilogues.
+    """
     y = fqt_matmul(x, p["w"], qkey(key, tag), policy)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)

@@ -6,16 +6,18 @@ import numpy as np
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ops import fused_qlinear, fused_quantize_psq
+from repro.kernels.ops import (fused_qlinear, fused_qlinear_bwd,
+                               fused_quantize_psq)
 from repro.kernels.q8_matmul import q8_matmul
 from repro.kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
 
-SHAPES = [(8, 16, 8), (128, 128, 128), (64, 256, 128), (256, 64, 512),
-          (32, 512, 32)]
+# tile-aligned, small-tile, and ragged (pad-and-slice) shapes
+SHAPES = [(8, 16, 8), (128, 128, 128), (64, 256, 128),
+          (33, 17, 9), (130, 70, 258)]
+SLOW_SHAPES = [(256, 64, 512), (32, 512, 32)]
 
 
-@pytest.mark.parametrize("mkn", SHAPES)
-def test_q8_matmul_vs_ref(mkn):
+def _q8_case(mkn):
     M, K, N = mkn
     key = jax.random.PRNGKey(M * 31 + N)
     ks = jax.random.split(key, 8)
@@ -27,8 +29,24 @@ def test_q8_matmul_vs_ref(mkn):
     u = jax.random.normal(ks[5], (N,))
     a = jax.random.normal(ks[6], (M,))
     b = jax.random.normal(ks[7], (N,))
-    out = q8_matmul(x8, y8, rs, cs, r2, u, a, b, interpret=True)
-    expect = ref.q8_matmul_ref(x8, y8, rs, cs, r2, u, a, b)
+    return x8, y8, rs, cs, r2, u, a, b
+
+
+@pytest.mark.parametrize("mkn", SHAPES)
+def test_q8_matmul_vs_ref(mkn):
+    args = _q8_case(mkn)
+    out = q8_matmul(*args, interpret=True)
+    expect = ref.q8_matmul_ref(*args)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-3)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("mkn", SLOW_SHAPES)
+def test_q8_matmul_vs_ref_slow(mkn):
+    args = _q8_case(mkn)
+    out = q8_matmul(*args, interpret=True)
+    expect = ref.q8_matmul_ref(*args)
     np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
                                rtol=1e-5, atol=1e-3)
 
@@ -51,7 +69,7 @@ def test_q8_matmul_tilings(tile):
     np.testing.assert_array_equal(np.asarray(full), np.asarray(tiled))
 
 
-@pytest.mark.parametrize("shape", [(16, 32), (64, 128), (256, 64), (8, 512)])
+@pytest.mark.parametrize("shape", [(16, 32), (64, 128), (33, 20), (7, 96)])
 @pytest.mark.parametrize("bits", [4, 8])
 def test_quantize_sr_rows_vs_ref(shape, bits):
     M, N = shape
@@ -62,6 +80,24 @@ def test_quantize_sr_rows_vs_ref(shape, bits):
     np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
     np.testing.assert_allclose(np.asarray(cs), np.asarray(rs_), rtol=1e-6)
     np.testing.assert_allclose(np.asarray(cz), np.asarray(rz), rtol=1e-6)
+
+
+@pytest.mark.parametrize("bm", [8, 16])
+def test_quantize_sr_pad_and_slice(bm):
+    """Row counts that are NOT block multiples hit the edge-pad path and
+    must still match the oracle exactly."""
+    M, N = 33, 20
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, N)) * 2
+    rbits = jax.random.bits(jax.random.PRNGKey(6), (M, N), jnp.uint32)
+    ck, cs, cz = quantize_sr_rows(x, rbits, 8, bm=bm, interpret=True)
+    rk, rs_, rz = ref.quantize_sr_rows_ref(x, rbits, 8)
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(rk))
+    np.testing.assert_allclose(np.asarray(cs), np.asarray(rs_), rtol=1e-6)
+    tk, ts, tz = quantize_sr_tensor(x, rbits, 8, bm=bm, interpret=True)
+    rk2, rs2, rz2 = ref.quantize_sr_tensor_ref(x, rbits, 8)
+    np.testing.assert_array_equal(np.asarray(tk), np.asarray(rk2))
+    assert abs(float(ts) - float(rs2)) < 1e-6 * abs(float(rs2))
+    assert float(tz) == float(rz2)
 
 
 @pytest.mark.parametrize("shape", [(16, 32), (128, 64)])
@@ -75,7 +111,7 @@ def test_quantize_sr_tensor_vs_ref(shape):
     assert abs(float(cs) - float(rs_)) < 1e-6 * abs(float(rs_))
 
 
-@pytest.mark.parametrize("mkn", [(16, 32, 16), (64, 128, 64), (128, 256, 128)])
+@pytest.mark.parametrize("mkn", [(16, 32, 16), (64, 128, 64), (33, 50, 9)])
 def test_fused_qlinear_matches_float(mkn):
     """End-to-end fused path ~= exact float matmul within quantization error,
     and exactly == the composed ref path."""
@@ -98,3 +134,32 @@ def test_fused_psq_unbiased():
             for i in range(128)]
     mean = jnp.mean(jnp.stack(outs), 0)
     assert float(jnp.max(jnp.abs(mean - g))) < 0.05
+
+
+@pytest.mark.parametrize("quant", ["ptq", "psq", "bhq"])
+@pytest.mark.parametrize("mkn", [(32, 16, 24), (33, 17, 9)])
+def test_fused_qlinear_bwd_matches_simulate(quant, mkn):
+    """Both backward GEMMs via the Pallas wrappers == the fp32 QDQ
+    composition of the same quantizers (codes are bit-identical; only GEMM
+    accumulation differs)."""
+    from repro.core import (quantize_bhq_stoch, quantize_psq_stoch,
+                            quantize_ptq_det, quantize_ptq_stoch)
+    M, K, N = mkn
+    key = jax.random.PRNGKey(11)
+    x = jax.random.normal(key, (M, K))
+    w = jax.random.normal(jax.random.fold_in(key, 1), (K, N)) * 0.2
+    g = jax.random.normal(jax.random.fold_in(key, 2), (M, N))
+    kb = jax.random.fold_in(key, 3)
+    dw, dx = fused_qlinear_bwd(x, w, g, kb, grad_quantizer=quant,
+                               bhq_block=16, interpret=True)
+    k1, k2 = jax.random.split(kb)
+    gq1 = quantize_ptq_stoch(g, k1, 8)
+    gq2 = {"ptq": lambda: quantize_ptq_stoch(g, k2, 8),
+           "psq": lambda: quantize_psq_stoch(g, k2, 8),
+           "bhq": lambda: quantize_bhq_stoch(g, k2, 8, block_rows=16)}[quant]()
+    dw_ref = quantize_ptq_det(x, 8).dequant().T @ gq1.dequant()
+    dx_ref = gq2.dequant() @ quantize_ptq_det(w, 8).dequant().T
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(dw_ref),
+                               rtol=1e-3, atol=5e-3)
+    np.testing.assert_allclose(np.asarray(dx), np.asarray(dx_ref),
+                               rtol=1e-3, atol=5e-3)

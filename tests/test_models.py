@@ -16,6 +16,14 @@ from repro.models import build_model
 B, T = 2, 8
 POLICY = QuantPolicy.fqt("bhq", 5, bhq_block=16)
 
+# Tier-1 keeps one arch per distinct code path (dense tx / MoE / recurrent /
+# hybrid / VLM / audio enc-dec); the remaining configs exercise the same
+# layers with different hyperparameters and run in the slow sweep.
+FAST_ARCHS = {"granite-3-2b", "olmoe-1b-7b", "rwkv6-1.6b", "zamba2-2.7b",
+              "qwen2-vl-2b", "whisper-medium"}
+ARCH_PARAMS = [pytest.param(a, marks=() if a in FAST_ARCHS
+                            else (pytest.mark.slow,)) for a in ARCH_NAMES]
+
 
 def make_smoke_batch(cfg, key, with_labels=True):
     batch = {}
@@ -33,7 +41,7 @@ def make_smoke_batch(cfg, key, with_labels=True):
     return batch
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_train_step(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -48,7 +56,7 @@ def test_smoke_train_step(arch):
         assert bool(jnp.all(jnp.isfinite(g))), arch
 
 
-@pytest.mark.parametrize("arch", ARCH_NAMES)
+@pytest.mark.parametrize("arch", ARCH_PARAMS)
 def test_smoke_prefill_decode(arch):
     cfg = get_config(arch, smoke=True)
     model = build_model(cfg)
@@ -66,7 +74,9 @@ def test_smoke_prefill_decode(arch):
     assert int(cache["index"]) == T + 2
 
 
-@pytest.mark.parametrize("arch", ["rwkv6-1.6b", "zamba2-2.7b"])
+@pytest.mark.parametrize("arch", ["rwkv6-1.6b",
+                                  pytest.param("zamba2-2.7b",
+                                               marks=pytest.mark.slow)])
 def test_ssm_prefill_decode_consistency(arch):
     """For recurrent archs: prefill-then-decode == decode-everything."""
     cfg = get_config(arch, smoke=True)

@@ -4,6 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+# hypothesis is an optional dev dependency (pyproject extra "test");
+# without it this module must skip cleanly, not kill collection.
+hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (num_bins, quantize_bhq_stoch, quantize_psq_stoch,

@@ -76,7 +76,10 @@ def test_trained_model_generates():
     assert bool(jnp.all((toks >= 0) & (toks < cfg.padded_vocab)))
 
 
+@pytest.mark.slow
 def test_deterministic_training_given_seed():
+    """Two identical seeds give bit-identical training (compiles the whole
+    train step twice — slow sweep only)."""
     pol = QuantPolicy.fqt("bhq", 6, bhq_block=16)
     _, a = _final_loss(pol, steps=10, seed=5)
     _, b = _final_loss(pol, steps=10, seed=5)
