@@ -20,7 +20,6 @@ import json
 import os
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (QuantPolicy, fqt_matmul, quantize_psq_stoch,
                         quantize_ptq_det, quantize_ptq_stoch, qt_gemm_nt,

@@ -8,7 +8,6 @@ refined-G BHQ ablation (DESIGN.md Sec. 6).
 from __future__ import annotations
 
 import jax
-import jax.numpy as jnp
 
 from repro.core import (quantize_bhq_stoch, quantize_psq_stoch,
                         quantize_ptq_stoch)
@@ -37,7 +36,6 @@ def run(n_samples: int = 128):
                 rows.append((f"fig3_var/{gname}/{qname}/{bits}b",
                              0.0, float(var)))
     # headline: bits BHQ saves vs PTQ at matched variance (paper: ~3 bits)
-    import math
     def var_of(q, bits, g):
         fn = jax.jit(lambda x, k: quants[q](x, k, bits))
         return float(empirical_mean_and_variance(

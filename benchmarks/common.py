@@ -5,7 +5,6 @@ from __future__ import annotations
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.core import QuantPolicy

@@ -6,7 +6,6 @@ Covers the full lifecycle: FQT training -> checkpoint -> restore -> batched
 prefill+decode serving with deterministic 8-bit forward quantizers.
 """
 
-import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import CheckpointManager

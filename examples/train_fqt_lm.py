@@ -10,7 +10,6 @@ deterministic synthetic data, fully quantized forward+backward.
 """
 
 import argparse
-import dataclasses
 
 from repro.configs.base import ArchConfig
 from repro.core import QuantPolicy

@@ -6,7 +6,6 @@ import jax
 from repro.configs import get_config, SHAPES
 from repro.models import build_model
 from repro.launch.roofline import model_flops
-from repro.launch.dryrun import active_param_frac
 
 cache = {}
 for path in glob.glob(os.path.join(os.path.dirname(__file__), "*", "*.json")):

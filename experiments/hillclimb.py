@@ -12,7 +12,6 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 import argparse
 import json
 
-import jax
 
 
 def main():

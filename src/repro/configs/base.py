@@ -8,7 +8,7 @@ per-arch grid (train_4k / prefill_32k / decode_32k / long_500k).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from typing import Optional
 
 __all__ = ["ArchConfig", "ShapeSpec", "SHAPES"]
 

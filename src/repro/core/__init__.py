@@ -8,15 +8,22 @@ from .bhq import BHQTensor, bhq_variance_bound, quantize_bhq_stoch
 from .compression import (compressed_grad_allreduce, compressed_psum,
                           compression_variance_bound)
 from .fqt import fqt_matmul
-from .policy import EXACT, FQT8_BHQ, QAT, QuantPolicy
+from .policy import EXACT, FQT8_BHQ, QAT, QuantPolicy, RoleOverride
 from .quantizers import (QTensor, dynamic_range, num_bins,
                          psq_variance_bound, ptq_variance_bound,
                          quantize_psq_stoch, quantize_ptq_det,
                          quantize_ptq_stoch, row_dynamic_range, sr_uniform,
                          sr_variance_exact, stochastic_round)
+from .registry import (ROLES, GemmQuantConfig, Quantizer, QuantizerSpec,
+                       available_quantizers, get_quantizer,
+                       register_quantizer)
 
 __all__ = [
-    "BHQTensor", "QTensor", "QuantPolicy", "EXACT", "QAT", "FQT8_BHQ",
+    "BHQTensor", "QTensor", "QuantPolicy", "RoleOverride", "EXACT", "QAT",
+    "FQT8_BHQ",
+    # role-based quantizer API (core/registry.py)
+    "ROLES", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
+    "register_quantizer", "get_quantizer", "available_quantizers",
     "fqt_matmul", "num_bins", "dynamic_range", "row_dynamic_range",
     "sr_uniform", "stochastic_round", "quantize_ptq_det",
     "quantize_ptq_stoch", "quantize_psq_stoch", "quantize_bhq_stoch",

@@ -49,7 +49,7 @@ import jax.numpy as jnp
 from ..kernels.q8_matmul import q8_matmul
 from ..kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
 from .bhq import BHQTensor
-from .policy import BACKENDS
+from .registry import BACKENDS
 from .quantizers import QTensor
 
 __all__ = [

@@ -31,7 +31,7 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from .quantizers import QTensor, num_bins, stochastic_round, row_dynamic_range
+from .quantizers import num_bins, stochastic_round, row_dynamic_range
 
 __all__ = ["BHQTensor", "quantize_bhq_stoch", "bhq_variance_bound"]
 

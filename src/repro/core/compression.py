@@ -23,7 +23,6 @@ Runs under ``shard_map``; the caller supplies the mesh axis (we use ``pod``).
 
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

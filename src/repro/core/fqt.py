@@ -8,15 +8,21 @@ This is the paper's computational primitive.  For a linear layer
       ``dW = Q_f(X)ᵀ @ Q_b1(dY)``   Q_b1 = stochastic per-tensor PTQ (8 bit)
       ``dX = Q_b2(dY) @ Q_theta(W)ᵀ``  Q_b2 ∈ {PTQ, PSQ, BHQ} (4-8 bit)
 
-Execution is delegated to the pluggable backend layer (core/backend.py):
-``QuantPolicy.backend`` selects ``simulate`` (fp32 QDQ), ``native`` (XLA
-int8 dot + affine epilogue) or ``pallas`` (fused Pallas kernels) for the
-forward GEMM *and both backward GEMMs*; under ``pallas`` the backward
-quantizers Q_b1/Q_b2 additionally run through the fused one-pass
-``quantize_sr_*`` kernels (PTQ/PSQ — BHQ's grouping stays in XLA, its GEMM
-and S⁻¹ epilogue still route through the backend).  The same quantizer
-algebra drives all three backends, so they agree to fp32 tolerance
-(tests/test_backend.py).
+The custom_vjp is quantizer-agnostic: it consumes a
+:class:`~repro.core.registry.GemmQuantConfig` naming one
+:class:`~repro.core.registry.QuantizerSpec` per tensor role
+``{fwd_act, fwd_weight, wgrad, agrad}`` and looks each up in the quantizer
+registry (core/registry.py).  Each quantizer owns its per-backend
+implementation (XLA vs the fused Pallas ``quantize_sr_*`` kernels), so
+adding a quantizer means registering an object — not editing this file.
+A ``None`` backward role computes that gradient GEMM from the dequantized
+forward operands; both ``None`` is exactly QAT (Eq. 4).
+
+GEMM execution is delegated to the pluggable backend layer
+(core/backend.py): ``simulate`` (fp32 QDQ), ``native`` (XLA int8 dot +
+affine epilogue) or ``pallas`` (fused kernels) for the forward GEMM *and
+both backward GEMMs*.  The same quantizer algebra drives all three
+backends, so they agree to fp32 tolerance (tests/test_backend.py).
 
 STE (Eq. 4): the backward differentiates through the *quantized* operands —
 no gradient flows into the quantizer itself.
@@ -25,17 +31,15 @@ no gradient flows into the quantizer itself.
 from __future__ import annotations
 
 from functools import partial
+from typing import Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backend import (qt_gemm, qt_gemm_nt, qt_gemm_tn, quantize_sr_rows_qt,
-                      quantize_sr_tensor_qt)
-from .bhq import quantize_bhq_stoch
+from .backend import qt_gemm, qt_gemm_nt, qt_gemm_tn
 from .policy import QuantPolicy
-from .quantizers import (quantize_psq_stoch, quantize_ptq_det,
-                         quantize_ptq_stoch)
+from .registry import GemmQuantConfig, QuantizerSpec, get_quantizer
 
 __all__ = ["fqt_matmul"]
 
@@ -44,34 +48,20 @@ def _float0_like(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
 
 
-# ---------------------------------------------------------------------------
-# Backward quantizer dispatch (Q_b1 / Q_b2)
-# ---------------------------------------------------------------------------
-
-def _quantize_wgrad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
-    """Q_b1: stochastic per-tensor PTQ; fused kernel under the pallas backend."""
-    if policy.backend == "pallas":
-        return quantize_sr_tensor_qt(g2d, key, policy.wgrad_bits,
-                                     policy.pallas_interpret)
-    return quantize_ptq_stoch(g2d, key, policy.wgrad_bits)
-
-
-def _quantize_grad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
-    """Q_b2 per ``policy.grad_quantizer``; PTQ/PSQ use the fused one-pass
-    kernels under the pallas backend (same codes bit-for-bit — both draw SR
-    uniforms as ``random.bits * 2^-32``)."""
-    if policy.grad_quantizer == "ptq":
-        if policy.backend == "pallas":
-            return quantize_sr_tensor_qt(g2d, key, policy.grad_bits,
-                                         policy.pallas_interpret)
-        return quantize_ptq_stoch(g2d, key, policy.grad_bits)
-    if policy.grad_quantizer == "psq":
-        if policy.backend == "pallas":
-            return quantize_sr_rows_qt(g2d, key, policy.grad_bits,
-                                       policy.pallas_interpret)
-        return quantize_psq_stoch(g2d, key, policy.grad_bits)
-    return quantize_bhq_stoch(g2d, key, policy.grad_bits,
-                              block_rows=policy.bhq_block)
+def _quantize_role(spec: QuantizerSpec, x2d: jax.Array, key,
+                   cfg: GemmQuantConfig):
+    """Registry dispatch for one tensor role (backend branching lives on the
+    quantizer object, not here)."""
+    q = get_quantizer(spec.name)
+    if key is None and q.stochastic:
+        # forward roles carry no PRNG key — the framework requires the
+        # forward quantizers to be deterministic (paper Sec. 2.1)
+        raise ValueError(
+            f"quantizer {spec.name!r} is stochastic and cannot serve a "
+            f"forward role (fwd_act/fwd_weight must be deterministic, "
+            f"e.g. 'ptq_det')")
+    return q.quantize(
+        x2d, key, spec, backend=cfg.backend, interpret=cfg.pallas_interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -79,40 +69,46 @@ def _quantize_grad(g2d: jax.Array, key: jax.Array, policy: QuantPolicy):
 # ---------------------------------------------------------------------------
 
 @partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _fqt(policy: QuantPolicy, x: jax.Array, w: jax.Array, key: jax.Array):
-    y, _ = _fqt_fwd(policy, x, w, key)
+def _fqt(cfg: GemmQuantConfig, x: jax.Array, w: jax.Array, key: jax.Array):
+    y, _ = _fqt_fwd(cfg, x, w, key)
     return y
 
 
-def _fqt_fwd(policy: QuantPolicy, x, w, key):
+def _fqt_fwd(cfg: GemmQuantConfig, x, w, key):
     lead = x.shape[:-1]
     dtype = x.dtype
     # quantizer math in fp32 regardless of activation dtype (bf16 streams)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    xq = quantize_ptq_det(x2, policy.act_bits)
-    wq = quantize_ptq_det(w.astype(jnp.float32), policy.weight_bits)
-    y = qt_gemm(xq, wq, backend=policy.backend,
-                interpret=policy.pallas_interpret)
+    xq = _quantize_role(cfg.fwd_act, x2, None, cfg)              # Q_f
+    wq = _quantize_role(cfg.fwd_weight, w.astype(jnp.float32), None, cfg)
+    y = qt_gemm(xq, wq, backend=cfg.backend,
+                interpret=cfg.pallas_interpret)
     return (y.reshape(*lead, w.shape[-1]).astype(dtype),
             (xq, wq, key, lead))
 
 
-def _fqt_bwd(policy: QuantPolicy, res, g):
+def _fqt_bwd(cfg: GemmQuantConfig, res, g):
     xq, wq, key, lead = res
     dtype = g.dtype          # cotangent dtype == stream dtype (y = x.dtype)
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
-    if not policy.quantize_bwd:
+    if cfg.wgrad is None and cfg.agrad is None:
         # QAT (Eq. 4): full-precision gradient through quantized operands.
         dw = xq.dequant().T @ g2
         dx = g2 @ wq.dequant().T
     else:
         k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
-        gq1 = _quantize_wgrad(g2, k1, policy)                    # Q_b1
-        gq2 = _quantize_grad(g2, k2, policy)                     # Q_b2
-        dw = qt_gemm_tn(xq, gq1, backend=policy.backend,
-                        interpret=policy.pallas_interpret)
-        dx = qt_gemm_nt(gq2, wq, backend=policy.backend,
-                        interpret=policy.pallas_interpret)
+        if cfg.wgrad is not None:
+            gq1 = _quantize_role(cfg.wgrad, g2, k1, cfg)         # Q_b1
+            dw = qt_gemm_tn(xq, gq1, backend=cfg.backend,
+                            interpret=cfg.pallas_interpret)
+        else:
+            dw = xq.dequant().T @ g2
+        if cfg.agrad is not None:
+            gq2 = _quantize_role(cfg.agrad, g2, k2, cfg)         # Q_b2
+            dx = qt_gemm_nt(gq2, wq, backend=cfg.backend,
+                            interpret=cfg.pallas_interpret)
+        else:
+            dx = g2 @ wq.dequant().T
     dx = dx.reshape(*lead, -1).astype(dtype)   # activation-grad in stream dtype
     return dx, dw, _float0_like(key)           # weight-grad stays fp32 (master)
 
@@ -121,12 +117,25 @@ _fqt.defvjp(_fqt_fwd, _fqt_bwd)
 
 
 def fqt_matmul(x: jax.Array, w: jax.Array, key: jax.Array,
-               policy: QuantPolicy) -> jax.Array:
+               policy: Union[QuantPolicy, GemmQuantConfig],
+               path: str = "") -> jax.Array:
     """``x @ w`` under the given quantization policy.
 
     x: (..., K) activations; w: (K, M) weights; key: PRNG key consumed by the
     backward-pass stochastic quantizers (ignored under exact/QAT policies).
+
+    ``policy`` may be a :class:`QuantPolicy` — resolved against ``path``
+    (the layer's logical position, e.g. ``"layers.mlp.up"``) through the
+    policy's per-layer overrides — or an already-resolved
+    :class:`GemmQuantConfig` for direct role-level control.  Resolution
+    happens at trace time; ``path`` must be a static Python string.
     """
-    if not policy.enabled:
+    if isinstance(policy, QuantPolicy):
+        if not policy.enabled:
+            return x @ w
+        cfg = policy.resolve(path)           # validated at resolution
+    else:
+        cfg = policy.validate()
+    if not cfg.quantize_fwd:        # layer pinned exact by an override
         return x @ w
-    return _fqt(policy, x, w, key)
+    return _fqt(cfg, x, w, key)

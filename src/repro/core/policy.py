@@ -1,4 +1,4 @@
-"""Quantization policy — the single config object threaded through the stack.
+"""Quantization policy — global defaults + per-layer overrides.
 
 Mirrors the paper's experimental setup (Appendix E):
 
@@ -11,6 +11,24 @@ Three canonical modes:
   ``exact()``  full-precision training        (paper's "Exact" rows)
   ``qat()``    quantized forward, FP backward (paper's "QAT" rows)
   ``fqt(...)`` fully quantized training       (paper's "b-bit FQT" rows)
+
+The role-based layer (core/registry.py) sits underneath: the global fields
+here are just *defaults* that :meth:`QuantPolicy.resolve` turns into a
+:class:`~repro.core.registry.GemmQuantConfig` — one
+:class:`~repro.core.registry.QuantizerSpec` per tensor role
+``{fwd_act, fwd_weight, wgrad, agrad}``.  ``overrides`` maps path regexes to
+partial role overrides, and every layer passes its logical path
+(``dense(..., path="layers.mlp.up")``) so heterogeneous precision — exact
+embeddings/lm_head, 8-bit attention, 4-bit-BHQ MLP agrad — is pure config:
+
+    QuantPolicy.fqt("bhq", 8, overrides={
+        r"lm_head|embed":  "exact",            # pin full precision
+        r"layers\\.attn\\.": 8,                # all roles at 8 bits
+        r"layers\\.mlp\\.":  {"agrad": ("bhq", 4)},   # partial role spec
+    })
+
+Matching is ``re.search``, applied in order — later matches win field-wise;
+partial specs merge over the defaults (see ``QuantizerSpec.merged_over``).
 
 Orthogonally, ``backend`` picks how every quantized GEMM executes
 (core/backend.py owns the dispatch; the policy x backend matrix is fully
@@ -31,13 +49,129 @@ interpret everywhere but TPU).
 from __future__ import annotations
 
 import dataclasses
+import functools
+import re
 from typing import Optional
 
-__all__ = ["QuantPolicy", "EXACT", "QAT", "FQT8_BHQ", "BACKENDS"]
+from .registry import (BACKENDS, EXACT_NAME, ROLES, GemmQuantConfig,
+                       QuantizerSpec, get_quantizer)
 
-# The one backend registry — core/backend.py dispatches over the same tuple.
-BACKENDS = ("simulate", "native", "pallas")
+__all__ = ["QuantPolicy", "RoleOverride", "EXACT", "QAT", "FQT8_BHQ",
+           "BACKENDS"]
 
+_BIT_FIELDS = ("act_bits", "weight_bits", "wgrad_bits", "grad_bits",
+               "dp_grad_bits")
+
+
+# ---------------------------------------------------------------------------
+# RoleOverride — one partial per-layer override
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class RoleOverride:
+    """Partial per-role settings merged over the policy defaults.
+
+    ``exact=True`` pins the layer to full precision; ``bits`` rewrites the
+    bitwidth of every role that stays quantized; the four role fields carry
+    partial :class:`QuantizerSpec` values (``None`` = leave the role alone,
+    spec name ``"exact"`` = pin just that role to full precision).
+    """
+
+    exact: bool = False
+    bits: Optional[int] = None
+    fwd_act: Optional[QuantizerSpec] = None
+    fwd_weight: Optional[QuantizerSpec] = None
+    wgrad: Optional[QuantizerSpec] = None
+    agrad: Optional[QuantizerSpec] = None
+
+    @classmethod
+    def of(cls, value) -> "RoleOverride":
+        """Coerce an override-ish value: ``"exact"``, an int (bits for all
+        roles), a RoleOverride, or a dict of role -> spec-ish (plus the
+        shorthand key ``"fwd"`` setting both forward roles and the scalar
+        keys ``"exact"``/``"bits"``)."""
+        if isinstance(value, RoleOverride):
+            return value
+        if value == EXACT_NAME:
+            return cls(exact=True)
+        if isinstance(value, int) and not isinstance(value, bool):
+            return cls(bits=value)
+        if isinstance(value, dict):
+            d = dict(value)
+            kw = {"exact": bool(d.pop("exact", False)),
+                  "bits": d.pop("bits", None)}
+            fwd = d.pop("fwd", None)
+            if fwd is not None:
+                d.setdefault("fwd_act", fwd)
+                d.setdefault("fwd_weight", fwd)
+            for role in ROLES:
+                if role in d:
+                    kw[role] = QuantizerSpec.of(d.pop(role))
+            if d:
+                raise ValueError(
+                    f"unknown override keys {sorted(d)}; expected "
+                    f"{('exact', 'bits', 'fwd') + ROLES}")
+            return cls(**kw)
+        raise TypeError(f"cannot interpret {value!r} as a RoleOverride")
+
+    def apply(self, cfg: GemmQuantConfig) -> GemmQuantConfig:
+        if self.exact:
+            cfg = dataclasses.replace(cfg, fwd_act=None, fwd_weight=None,
+                                      wgrad=None, agrad=None)
+        # blanket `bits` rewrites first, so an explicit per-role spec in the
+        # SAME override entry (more specific) wins over it
+        if self.bits is not None:
+            cfg = dataclasses.replace(cfg, **{
+                role: getattr(cfg, role).with_bits(self.bits)
+                for role in ROLES if getattr(cfg, role) is not None})
+        for role in ROLES:
+            part = getattr(self, role)
+            if part is None:
+                continue
+            base = getattr(cfg, role)
+            if not part.name and base is None:
+                # nothing to merge over: the role is full-precision here
+                # (QAT / an earlier exact pin) — silently dropping the
+                # requested quantization would lie about the precision
+                raise ValueError(
+                    f"override for role {role!r} gives no quantizer name "
+                    f"but the role has no quantizer to inherit (it is "
+                    f"full-precision at this point); name one explicitly, "
+                    f"e.g. {role}='psq:{part.bits or 8}'")
+            spec = part.merged_over(base)
+            cfg = dataclasses.replace(
+                cfg, **{role: None if spec.name == EXACT_NAME else spec})
+        return cfg
+
+
+def _normalize_overrides(overrides) -> tuple:
+    """dict / iterable-of-pairs -> hashable ((pattern, RoleOverride), ...)."""
+    if not overrides:
+        return ()
+    items = overrides.items() if isinstance(overrides, dict) else overrides
+    out = []
+    for pattern, value in items:
+        try:                           # fail loudly on a bad regex, up front
+            re.compile(pattern)
+        except re.error as e:
+            raise ValueError(
+                f"invalid override pattern {pattern!r}: {e}") from None
+        out.append((pattern, RoleOverride.of(value)))
+    return tuple(out)
+
+
+@functools.lru_cache(maxsize=4096)
+def _resolve(policy: "QuantPolicy", path: str) -> GemmQuantConfig:
+    cfg = policy._default_gemm_config()
+    for pattern, override in policy.overrides:
+        if re.search(pattern, path):
+            cfg = override.apply(cfg)
+    return cfg.validate()
+
+
+# ---------------------------------------------------------------------------
+# QuantPolicy
+# ---------------------------------------------------------------------------
 
 @dataclasses.dataclass(frozen=True)
 class QuantPolicy:
@@ -47,8 +181,10 @@ class QuantPolicy:
     quantize_bwd: bool = True      # False => QAT (backward in full precision)
     wgrad_bits: int = 8            # Q_b1 bits (stochastic per-tensor)
     grad_bits: int = 8             # Q_b2 bits
-    grad_quantizer: str = "bhq"    # Q_b2 type: "ptq" | "psq" | "bhq"
+    grad_quantizer: str = "bhq"    # Q_b2 type: any registered quantizer name
     bhq_block: int = 1024          # BHQ row-block size
+    # --- per-layer policy tree (core/registry.py role specs) ---
+    overrides: tuple = ()          # ((path_regex, RoleOverride), ...) in order
     # --- execution backend (core/backend.py dispatch) ---
     backend: str = "simulate"      # "simulate" | "native" | "pallas"
     pallas_interpret: Optional[bool] = None  # None => auto (non-TPU interprets)
@@ -57,9 +193,59 @@ class QuantPolicy:
     dp_grad_bits: int = 8
 
     def __post_init__(self):
-        assert self.grad_quantizer in ("ptq", "psq", "bhq")
-        assert self.backend in BACKENDS, self.backend
-        assert 2 <= self.grad_bits <= 8 and 2 <= self.act_bits <= 8
+        get_quantizer(self.grad_quantizer)   # ValueError if unregistered
+        if self.backend not in BACKENDS:
+            raise ValueError(f"unknown backend {self.backend!r}; "
+                             f"expected one of {BACKENDS}")
+        for field in _BIT_FIELDS:
+            bits = getattr(self, field)
+            if not (isinstance(bits, int) and 2 <= bits <= 8):
+                raise ValueError(f"{field}={bits!r} out of range: "
+                                 "bitwidths must be ints in [2, 8]")
+        if not (isinstance(self.bhq_block, int) and self.bhq_block > 0):
+            raise ValueError(f"bhq_block={self.bhq_block!r} must be a "
+                             "positive int")
+        object.__setattr__(self, "overrides",
+                           _normalize_overrides(self.overrides))
+
+    # -- role resolution (the PolicyTree layer) -------------------------
+
+    def _default_gemm_config(self) -> GemmQuantConfig:
+        """The global-field defaults as one GemmQuantConfig."""
+        if not self.enabled:
+            return GemmQuantConfig(backend=self.backend,
+                                   pallas_interpret=self.pallas_interpret)
+        wgrad = agrad = None
+        if self.quantize_bwd:
+            wgrad = QuantizerSpec("ptq", self.wgrad_bits)
+            params = ()
+            if self.grad_quantizer == "bhq":
+                params = (("block_rows", self.bhq_block),)
+            agrad = QuantizerSpec(self.grad_quantizer, self.grad_bits, params)
+        return GemmQuantConfig(
+            fwd_act=QuantizerSpec("ptq_det", self.act_bits),
+            fwd_weight=QuantizerSpec("ptq_det", self.weight_bits),
+            wgrad=wgrad, agrad=agrad,
+            backend=self.backend, pallas_interpret=self.pallas_interpret)
+
+    def resolve(self, path: str = "") -> GemmQuantConfig:
+        """Per-layer role specs for the GEMM at ``path``.
+
+        Defaults come from the global fields; every ``overrides`` entry whose
+        regex ``re.search``-matches ``path`` is applied in order (later
+        matches win field-wise, partial specs merge over what they override).
+        Called at trace time — resolution is pure Python on static data and
+        memoized, so it never costs anything inside jit.
+        """
+        return _resolve(self, path or "")
+
+    def spec_table(self, paths) -> tuple:
+        """((path, resolved-spec-description), ...) for a path list —
+        the per-layer precision table of a config (tested + printed by
+        examples/quickstart.py)."""
+        return tuple((p, self.resolve(p).describe()) for p in paths)
+
+    # -- legacy surface --------------------------------------------------
 
     @property
     def mode(self) -> str:
@@ -69,7 +255,12 @@ class QuantPolicy:
     @staticmethod
     def _resolve_backend(backend: str, mode: str) -> str:
         # `mode` is the legacy spelling; an explicit `backend` wins.
-        return backend or mode or "simulate"
+        chosen = backend or mode or "simulate"
+        if chosen not in BACKENDS:
+            which = "backend" if backend else "mode"
+            raise ValueError(f"invalid {which}={chosen!r}; "
+                             f"expected one of {BACKENDS}")
+        return chosen
 
     @staticmethod
     def exact() -> "QuantPolicy":

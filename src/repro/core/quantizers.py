@@ -23,8 +23,6 @@ the paper exploits lives (DESIGN.md Sec. 6).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
-from typing import Optional
 
 import jax
 import jax.numpy as jnp

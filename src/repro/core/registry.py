@@ -1,0 +1,323 @@
+"""Role-based quantizer API: first-class quantizers, a registry, role specs.
+
+The paper's framework assigns a *distinct* quantizer to each tensor role of
+the linear-layer training step (Sec. 2, Eq. 3/6):
+
+  ``fwd_act``     Q_f      forward activations   (deterministic)
+  ``fwd_weight``  Q_theta  forward weights       (deterministic)
+  ``wgrad``       Q_b1     output-grad operand of the dW GEMM (stochastic)
+  ``agrad``       Q_b2     output-grad operand of the dX GEMM (stochastic)
+
+This module makes that assignment first-class:
+
+  * :class:`Quantizer` — the pluggable object owning the quantize
+    implementation *per execution backend* (simulate/native run the XLA
+    quantizers; pallas routes through the fused ``quantize_sr_*`` kernels).
+    The backend branching lives HERE, on the quantizer, not inside the
+    ``_fqt`` custom_vjp — third-party quantizers plug in via
+    :func:`register_quantizer` without touching core/fqt.py.
+  * :class:`QuantizerSpec` — a hashable (name, bits, params) reference to a
+    registered quantizer; partial specs (empty name / ``bits=None``) merge
+    over defaults during per-layer policy resolution (core/policy.py).
+  * :class:`GemmQuantConfig` — the four role specs plus the execution
+    backend; the static (hashable) argument the ``_fqt`` custom_vjp
+    dispatches on.  A ``None`` role means that operand stays full precision.
+
+Built-in quantizers (registered at import): ``ptq_det`` (forward),
+``ptq`` / ``psq`` / ``bhq`` (stochastic backward, paper Secs. 3.3/4.1/4.2).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+
+from .bhq import quantize_bhq_stoch
+from .quantizers import (quantize_psq_stoch, quantize_ptq_det,
+                         quantize_ptq_stoch)
+
+__all__ = [
+    "BACKENDS", "ROLES", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
+    "register_quantizer", "get_quantizer", "available_quantizers",
+]
+
+# The one backend registry — core/backend.py dispatches over the same tuple.
+BACKENDS = ("simulate", "native", "pallas")
+
+# The paper's four tensor roles, in (forward, forward, Q_b1, Q_b2) order.
+ROLES = ("fwd_act", "fwd_weight", "wgrad", "agrad")
+
+# Spec name that pins a role (or a whole layer) to full precision.
+EXACT_NAME = "exact"
+
+
+# ---------------------------------------------------------------------------
+# QuantizerSpec — hashable reference to a registered quantizer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QuantizerSpec:
+    """``(name, bits, params)`` reference into the quantizer registry.
+
+    Hashable (params are a sorted tuple of items) so it can ride inside the
+    static argument of a ``custom_vjp``.  Partial specs express overrides:
+    ``name=""`` inherits the base spec's quantizer, ``bits=None`` inherits
+    the base bits — see :meth:`merged_over`.
+    """
+
+    name: str = ""
+    bits: Optional[int] = None
+    params: tuple = ()                 # sorted ((key, value), ...)
+
+    @classmethod
+    def of(cls, value, **params) -> Optional["QuantizerSpec"]:
+        """Coerce a spec-ish value: ``None``, a spec, ``"bhq"``, ``"bhq:4"``,
+        ``("bhq", 4)``, or ``{"name": "bhq", "bits": 4, "block_rows": 32}``."""
+        if value is None or isinstance(value, QuantizerSpec):
+            return value
+        if isinstance(value, str):
+            name, _, bits = value.partition(":")
+            return cls(name, int(bits) if bits else None,
+                       tuple(sorted(params.items())))
+        if isinstance(value, dict):
+            d = dict(value)
+            name, bits = d.pop("name", ""), d.pop("bits", None)
+            d.update(params)
+            return cls(name, bits, tuple(sorted(d.items())))
+        if isinstance(value, (tuple, list)):
+            name = value[0]
+            bits = value[1] if len(value) > 1 else None
+            extra = dict(value[2]) if len(value) > 2 else {}
+            extra.update(params)
+            return cls(name, bits, tuple(sorted(extra.items())))
+        raise TypeError(f"cannot interpret {value!r} as a QuantizerSpec")
+
+    def param(self, key: str, default=None):
+        return dict(self.params).get(key, default)
+
+    def with_bits(self, bits: int) -> "QuantizerSpec":
+        return dataclasses.replace(self, bits=bits)
+
+    def merged_over(self, base: Optional["QuantizerSpec"]) -> "QuantizerSpec":
+        """Fill this partial spec from ``base`` (the policy default for the
+        role): empty name and ``bits=None`` inherit; params merge over the
+        base params only when the quantizer name is unchanged (another
+        quantizer's params are meaningless)."""
+        name = self.name or (base.name if base else EXACT_NAME)
+        bits = self.bits if self.bits is not None else \
+            (base.bits if base is not None else None)
+        if base is not None and base.name == name:
+            params = dict(base.params)
+            params.update(self.params)
+        else:
+            params = dict(self.params)
+        return QuantizerSpec(name, bits, tuple(sorted(params.items())))
+
+    def describe(self) -> str:
+        s = f"{self.name}:{self.bits if self.bits is not None else 8}"
+        if self.params:
+            s += "(" + ",".join(f"{k}={v}" for k, v in self.params) + ")"
+        return s
+
+
+def _spec_str(spec: Optional[QuantizerSpec]) -> str:
+    return "-" if spec is None else spec.describe()
+
+
+# ---------------------------------------------------------------------------
+# GemmQuantConfig — the four roles of one quantized GEMM + execution backend
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class GemmQuantConfig:
+    """What ``_fqt`` consumes: one resolved spec per tensor role.
+
+    ``None`` for a forward role disables quantization of the whole GEMM
+    (both forward roles travel together — the backend GEMMs need integer
+    codes on both operands); ``None`` for a backward role computes that
+    gradient GEMM from the dequantized forward operands (QAT when both
+    backward roles are ``None``, paper Eq. 4).
+    """
+
+    fwd_act: Optional[QuantizerSpec] = None
+    fwd_weight: Optional[QuantizerSpec] = None
+    wgrad: Optional[QuantizerSpec] = None
+    agrad: Optional[QuantizerSpec] = None
+    backend: str = "simulate"
+    pallas_interpret: Optional[bool] = None
+
+    @property
+    def quantize_fwd(self) -> bool:
+        return self.fwd_act is not None and self.fwd_weight is not None
+
+    def validate(self) -> "GemmQuantConfig":
+        """Reject configs that cannot execute faithfully.  Called after
+        override application (transient intermediate states inside a single
+        override are allowed) and on directly-passed configs.
+
+        * Backward roles quantized while the forward is (partially) exact:
+          the backward GEMMs consume the *quantized forward operands*
+          (Eq. 6), so such a config would silently train exact — pin the
+          whole layer ``"exact"`` or quantize both forward roles.
+        * Out-of-range bits: codes are stored as (u)int8, so bits outside
+          [2, 8] wrap mod 256 and produce garbage numerics silently — the
+          same range the legacy ``QuantPolicy`` bit fields enforce.
+        """
+        if not self.quantize_fwd and (self.wgrad or self.agrad):
+            raise ValueError(
+                f"invalid role config {self.describe_roles()}: backward "
+                f"roles are quantized but the forward is (partially) exact; "
+                f"the backward GEMMs need quantized forward operands — pin "
+                f"the whole layer 'exact' or set both fwd_act and fwd_weight")
+        if (self.fwd_act is None) != (self.fwd_weight is None):
+            # one forward operand exact would silently disable the whole
+            # GEMM's quantization (the int GEMM needs codes on both sides)
+            raise ValueError(
+                f"invalid role config {self.describe_roles()}: the forward "
+                f"roles travel together — set both fwd_act and fwd_weight, "
+                f"or pin the whole layer 'exact'")
+        for role in ROLES:
+            spec = getattr(self, role)
+            if spec is None or spec.bits is None:
+                continue
+            if not (isinstance(spec.bits, int) and 2 <= spec.bits <= 8):
+                raise ValueError(
+                    f"{role}={spec.describe()}: bits must be an int in "
+                    f"[2, 8] (codes are stored as int8)")
+        return self
+
+    def describe_roles(self) -> str:
+        return " ".join(f"{r}={_spec_str(getattr(self, r))}" for r in ROLES)
+
+    def describe(self) -> str:
+        if not self.quantize_fwd:
+            return "exact"
+        return (f"fwd={_spec_str(self.fwd_act)}/{_spec_str(self.fwd_weight)} "
+                f"wgrad={_spec_str(self.wgrad)} agrad={_spec_str(self.agrad)}")
+
+
+# ---------------------------------------------------------------------------
+# The Quantizer protocol + registry
+# ---------------------------------------------------------------------------
+
+class Quantizer:
+    """Base class for pluggable quantizers.
+
+    Subclasses implement :meth:`quantize` and own their backend dispatch:
+    the same object serves ``simulate``/``native`` (XLA quantize, integer
+    codes consumed by the backend GEMM) and ``pallas`` (fused one-pass
+    kernels) — core/fqt.py never branches on the backend again.
+
+    ``key`` is ``None`` for the deterministic forward roles; stochastic
+    quantizers may require it.  The return value must expose
+    ``codes/scale/zero/bits/dequant()`` (a :class:`~repro.core.quantizers.
+    QTensor` or :class:`~repro.core.bhq.BHQTensor`) so the backend GEMMs in
+    core/backend.py can consume it.
+    """
+
+    name: str = ""
+    stochastic: bool = True
+
+    def quantize(self, x2d: jax.Array, key, spec: QuantizerSpec, *,
+                 backend: str, interpret: Optional[bool] = None):
+        raise NotImplementedError
+
+    def __repr__(self):
+        return f"<Quantizer {self.name or type(self).__name__}>"
+
+
+_REGISTRY: dict = {}
+
+
+def register_quantizer(name: str, quantizer: Quantizer,
+                       overwrite: bool = False) -> Quantizer:
+    """Register ``quantizer`` under ``name`` (``QuantizerSpec(name, ...)``)."""
+    if name in _REGISTRY and not overwrite:
+        raise ValueError(f"quantizer {name!r} already registered; "
+                         "pass overwrite=True to replace it")
+    _REGISTRY[name] = quantizer
+    return quantizer
+
+
+def get_quantizer(name: str) -> Quantizer:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown quantizer {name!r}; registered: "
+            f"{', '.join(sorted(_REGISTRY))}") from None
+
+
+def available_quantizers() -> tuple:
+    return tuple(sorted(_REGISTRY))
+
+
+# ---------------------------------------------------------------------------
+# Built-in quantizers (the paper's family)
+# ---------------------------------------------------------------------------
+# The fused-kernel wrappers live in core/backend.py (which imports this
+# module for BACKENDS); they are imported lazily at trace time.
+
+class DeterministicPTQ(Quantizer):
+    """Q_f / Q_theta: deterministic per-tensor PTQ (paper Sec. 2.1).
+
+    Forward-role quantizer: round-to-nearest, no PRNG key.  Runs in XLA on
+    every backend (the pallas fusion targets the stochastic backward
+    quantizers; the forward quantize is already one cheap pass).
+    """
+
+    name = "ptq_det"
+    stochastic = False
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        return quantize_ptq_det(x2d, spec.bits or 8)
+
+
+class StochasticPTQ(Quantizer):
+    """Q_b1 / PTQ Q_b2: stochastic per-tensor PTQ (paper Sec. 3.3)."""
+
+    name = "ptq"
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        bits = spec.bits or 8
+        if backend == "pallas":
+            from .backend import quantize_sr_tensor_qt
+            return quantize_sr_tensor_qt(x2d, key, bits, interpret)
+        return quantize_ptq_stoch(x2d, key, bits)
+
+
+class StochasticPSQ(Quantizer):
+    """PSQ Q_b2: stochastic per-sample quantizer (paper Sec. 4.1)."""
+
+    name = "psq"
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        bits = spec.bits or 8
+        if backend == "pallas":
+            from .backend import quantize_sr_rows_qt
+            return quantize_sr_rows_qt(x2d, key, bits, interpret)
+        return quantize_psq_stoch(x2d, key, bits)
+
+
+class BlockHouseholder(Quantizer):
+    """BHQ Q_b2 (paper Sec. 4.2).  Params: ``block_rows`` (row-block size),
+    ``g_search`` ("refined" | "paper").  The grouping/Householder transform
+    stays in XLA on every backend; the GEMM it feeds — including the
+    ``S^{-1}`` output epilogue — still routes through the selected backend
+    (core/backend.py ``qt_gemm_nt``)."""
+
+    name = "bhq"
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        return quantize_bhq_stoch(
+            x2d, key, spec.bits or 8,
+            block_rows=spec.param("block_rows", 1024),
+            g_search=spec.param("g_search", "refined"))
+
+
+register_quantizer("ptq_det", DeterministicPTQ())
+register_quantizer("ptq", StochasticPTQ())
+register_quantizer("psq", StochasticPSQ())
+register_quantizer("bhq", BlockHouseholder())

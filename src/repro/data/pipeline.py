@@ -11,10 +11,9 @@ from __future__ import annotations
 
 import queue
 import threading
-from typing import Callable, Iterator, Optional
+from typing import Callable, Iterator
 
 import jax
-import numpy as np
 
 __all__ = ["ShardedLoader", "Prefetcher"]
 

@@ -2,7 +2,6 @@
 
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 __all__ = ["q8_matmul_ref", "quantize_sr_rows_ref", "quantize_sr_tensor_ref"]

@@ -50,7 +50,7 @@ from ..models import build_model
 from ..optim import sgd
 from ..sharding import make_plan
 from .mesh import make_production_mesh
-from .roofline import HW, collective_bytes, model_flops, roofline_terms
+from .roofline import collective_bytes, model_flops, roofline_terms
 from .train import make_train_step
 
 __all__ = ["run_cell", "main"]

@@ -118,6 +118,41 @@ def train_loop(cfg, policy: QuantPolicy, *, steps: int, batch_size: int,
     return params, opt_state, history
 
 
+def parse_override(text: str):
+    """One ``--override`` CLI entry -> (path_regex, override-ish).
+
+    Grammar (right-hand side of ``PATTERN=...``):
+      ``exact``             pin every matching layer to full precision
+      ``bits:B``            rewrite the bitwidth of every quantized role
+      ``ROLE:QUANT[:B]``    set one role (fwd/fwd_act/fwd_weight/wgrad/agrad)
+                            to a registered quantizer, e.g. ``agrad:bhq:4``
+    e.g. ``--override 'lm_head|embed=exact' --override 'layers.mlp=agrad:bhq:4'``
+    """
+    pattern, sep, rhs = text.partition("=")
+    if not sep or not pattern or not rhs:
+        raise argparse.ArgumentTypeError(
+            f"{text!r}: expected PATTERN=SPEC")
+    if rhs == "exact":
+        value = "exact"
+    else:
+        head, _, rest = rhs.partition(":")
+        if head == "bits":
+            value = int(rest)
+        elif rest:
+            value = {head: rest}      # "agrad:bhq:4" -> {"agrad": "bhq:4"}
+        else:
+            raise argparse.ArgumentTypeError(
+                f"{text!r}: expected exact | bits:B | ROLE:QUANT[:B]")
+    # validate eagerly (regex, role names, spec shape) so argparse turns a
+    # bad value into a clean usage error, not a traceback at policy time
+    from ..core.policy import _normalize_overrides
+    try:
+        _normalize_overrides(((pattern, value),))
+    except ValueError as e:
+        raise argparse.ArgumentTypeError(str(e)) from None
+    return pattern, value
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description="FQT training driver")
     ap.add_argument("--arch", default="statquant-tx")
@@ -136,17 +171,33 @@ def main(argv=None):
                     help="quantized-GEMM execution backend (core/backend.py);"
                          " pallas = fused kernels for fwd AND both bwd GEMMs")
     ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="PATTERN=SPEC", type=parse_override,
+                    help="per-layer policy override (repeatable, applied in "
+                         "order): PATTERN=exact | PATTERN=bits:B | "
+                         "PATTERN=ROLE:QUANT[:B]  e.g. 'lm_head=exact' "
+                         "'layers.mlp=agrad:bhq:4'")
     args = ap.parse_args(argv)
 
     if args.quant == "exact":
+        if args.override:
+            ap.error("--override has no effect with --quant exact "
+                     "(the policy quantizes nothing to override)")
         policy = QuantPolicy.exact()
     elif args.quant == "qat":
-        policy = QuantPolicy.qat(backend=args.backend)
+        policy = QuantPolicy.qat(backend=args.backend,
+                                 overrides=tuple(args.override))
     else:
         policy = QuantPolicy.fqt(args.quant, args.grad_bits, bhq_block=256,
-                                 backend=args.backend)
+                                 backend=args.backend,
+                                 overrides=tuple(args.override))
 
     cfg = get_config(args.arch, smoke=args.smoke)
+    if args.override:
+        from ..models import model_quant_paths
+        print("[train] resolved per-layer quantizer specs:")
+        for path, desc in policy.spec_table(model_quant_paths(cfg)):
+            print(f"  {path:32s} {desc}")
     prm = PreemptionHandler(install=True)
     train_loop(cfg, policy, steps=args.steps, batch_size=args.batch,
                seq_len=args.seq, lr=args.lr, opt_name=args.opt,

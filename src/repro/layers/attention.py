@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core import QuantPolicy
-from .common import dense, init_dense, qkey
+from .common import dense, init_dense
 from .embeddings import apply_mrope, apply_rope
 
 __all__ = ["init_attention", "attention", "decode_attention",
@@ -38,12 +38,12 @@ def init_attention(key, cfg: ArchConfig) -> dict:
     }
 
 
-def _qkv(p, x, key, policy, cfg, positions):
+def _qkv(p, x, key, policy, cfg, positions, path="attn"):
     B, T, _ = x.shape
     hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    q = dense(p["wq"], x, key, policy, tag=1).reshape(B, T, H, hd)
-    k = dense(p["wk"], x, key, policy, tag=2).reshape(B, T, KV, hd)
-    v = dense(p["wv"], x, key, policy, tag=3).reshape(B, T, KV, hd)
+    q = dense(p["wq"], x, key, policy, 1, f"{path}.wq").reshape(B, T, H, hd)
+    k = dense(p["wk"], x, key, policy, 2, f"{path}.wk").reshape(B, T, KV, hd)
+    v = dense(p["wv"], x, key, policy, 3, f"{path}.wv").reshape(B, T, KV, hd)
     if cfg.rope == "standard":
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
@@ -84,24 +84,26 @@ def attention(p: dict, x: jax.Array, key, policy: QuantPolicy,
               cfg: ArchConfig, positions: jax.Array,
               causal: bool = True,
               kv_override: Optional[tuple] = None,
-              return_kv: bool = False, sdpa_hint=None):
+              return_kv: bool = False, sdpa_hint=None, path: str = "attn"):
     """Full-sequence attention (train / prefill / encoder).
 
     kv_override: (k, v) of shape (B, S, KV, hd) — cross-attention.
     return_kv: also return the (rotated) k, v for cache initialization.
+    path: logical position for per-layer policy resolution; the four
+    projections resolve as ``{path}.wq/.wk/.wv/.wo``.
     """
     B, T, _ = x.shape
     hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     G = H // KV
     if kv_override is not None:
-        q = dense(p["wq"], x, key, policy, tag=1).reshape(B, T, H, hd)
+        q = dense(p["wq"], x, key, policy, 1, f"{path}.wq").reshape(B, T, H, hd)
         if cfg.rope == "standard":
             q = apply_rope(q, positions, cfg.rope_theta)
         elif cfg.rope == "mrope":
             q = apply_mrope(q, positions, cfg.rope_theta)
         k, v = kv_override
     else:
-        q, k, v = _qkv(p, x, key, policy, cfg, positions)
+        q, k, v = _qkv(p, x, key, policy, cfg, positions, path)
     q, k, v = _apply_attn_hint(q, k, v, sdpa_hint)
     S = k.shape[1]
     if causal:
@@ -111,19 +113,22 @@ def attention(p: dict, x: jax.Array, key, policy: QuantPolicy,
         mask = jnp.ones((1, 1, 1, T, S), bool)
     out = _sdpa(q.reshape(B, T, KV, G, hd), k, v, mask)
     out = out.reshape(B, T, H * hd)
-    y = dense(p["wo"], out, key, policy, tag=4)
+    y = dense(p["wo"], out, key, policy, 4, f"{path}.wo")
     if return_kv:
         return y, (k, v)
     return y
 
 
 def cross_attention_kv(p: dict, enc_out: jax.Array, key,
-                       policy: QuantPolicy, cfg: ArchConfig):
+                       policy: QuantPolicy, cfg: ArchConfig,
+                       path: str = "attn"):
     """Precompute the encoder-side K/V for decoder cross-attention."""
     B, S, _ = enc_out.shape
     hd, KV = cfg.hd, cfg.n_kv_heads
-    k = dense(p["wk"], enc_out, key, policy, tag=2).reshape(B, S, KV, hd)
-    v = dense(p["wv"], enc_out, key, policy, tag=3).reshape(B, S, KV, hd)
+    k = dense(p["wk"], enc_out, key, policy, 2,
+              f"{path}.wk").reshape(B, S, KV, hd)
+    v = dense(p["wv"], enc_out, key, policy, 3,
+              f"{path}.wv").reshape(B, S, KV, hd)
     return k, v
 
 
@@ -141,7 +146,8 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
-                     key, policy: QuantPolicy, cfg: ArchConfig):
+                     key, policy: QuantPolicy, cfg: ArchConfig,
+                     path: str = "attn"):
     """One-token attention step. x: (B, 1, d); index: scalar position.
 
     Returns (y, new_cache). Attends over cache positions <= index.
@@ -152,7 +158,7 @@ def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
     positions = jnp.full((B, 1), index, jnp.int32)
     if cfg.rope == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, B, 1))
-    q, k_new, v_new = _qkv(p, x, key, policy, cfg, positions)
+    q, k_new, v_new = _qkv(p, x, key, policy, cfg, positions, path)
     flat = KV * hd
     cache = {
         "k": jax.lax.dynamic_update_slice(
@@ -167,5 +173,6 @@ def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
     v = cache["v"].reshape(B, S, KV, hd).astype(x.dtype)
     mask = (jnp.arange(S) <= index)[None, None, None, None, :]  # (1,1,1,1,S)
     out = _sdpa(q.reshape(B, 1, KV, G, hd), k, v, mask)
-    y = dense(p["wo"], out.reshape(B, 1, H * hd), key, policy, tag=4)
+    y = dense(p["wo"], out.reshape(B, 1, H * hd), key, policy, 4,
+              f"{path}.wo")
     return y, cache

@@ -34,15 +34,22 @@ def init_dense(key, d_in: int, d_out: int, bias: bool = False,
 
 
 def dense(p: dict, x: jax.Array, key: jax.Array, policy: QuantPolicy,
-          tag: int = 0) -> jax.Array:
+          tag: int = 0, path: str = "") -> jax.Array:
     """FQT linear layer: the paper's quantized GEMM + fp bias add.
 
     The GEMM executes on whichever backend ``policy.backend`` selects
     (simulate / native / pallas — core/backend.py), so every model layer
     built on ``dense`` trains on the fused Pallas kernels when asked to;
     nothing at this level knows about code layouts or epilogues.
+
+    ``path`` is the layer's logical position (e.g. ``"layers.mlp.up"``) —
+    a static string the policy's per-layer overrides resolve against
+    (``QuantPolicy.resolve``).  Layer authors: extend your parent's path
+    with ``.`` separators and one leaf name per GEMM; stacks scanned with
+    ``lax.scan`` share a single trace, so paths name the *role within the
+    stack* ("layers.attn.wq"), not a layer index.
     """
-    y = fqt_matmul(x, p["w"], qkey(key, tag), policy)
+    y = fqt_matmul(x, p["w"], qkey(key, tag), policy, path=path)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y

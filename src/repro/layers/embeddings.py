@@ -34,9 +34,14 @@ def init_lm_head(key, cfg: ArchConfig) -> dict:
             * (1.0 / jnp.sqrt(cfg.d_model))}
 
 
-def lm_head(p: dict, x: jax.Array, key, policy: QuantPolicy) -> jax.Array:
-    """Final projection — a linear layer, so quantized like every other."""
-    return fqt_matmul(x, p["w"], qkey(key, 0x1ead), policy)
+def lm_head(p: dict, x: jax.Array, key, policy: QuantPolicy,
+            path: str = "lm_head") -> jax.Array:
+    """Final projection — a linear layer, so quantized like every other.
+
+    Resolves at ``path="lm_head"``, so ``overrides={r"lm_head": "exact"}``
+    reproduces the common keep-the-head-full-precision recipe.
+    """
+    return fqt_matmul(x, p["w"], qkey(key, 0x1ead), policy, path=path)
 
 
 # ---------------------------------------------------------------------------

@@ -144,24 +144,25 @@ def _ssd_chunked(x, dt, A_log, Bm, Cm, h0):
     return y, h_fin
 
 
-def _project(p, x, key, policy, cfg, tag):
+def _project(p, x, key, policy, cfg, tag, path):
     d_inner, H = _dims(cfg)
-    z = dense(p["z_proj"], x, key, policy, tag + 1)
-    xs = dense(p["x_proj"], x, key, policy, tag + 2)
-    bc = dense(p["bc_proj"], x, key, policy, tag + 3)
-    dt_raw = dense(p["dt_proj"], x, key, policy, tag + 4)
+    z = dense(p["z_proj"], x, key, policy, tag + 1, f"{path}.z_proj")
+    xs = dense(p["x_proj"], x, key, policy, tag + 2, f"{path}.x_proj")
+    bc = dense(p["bc_proj"], x, key, policy, tag + 3, f"{path}.bc_proj")
+    dt_raw = dense(p["dt_proj"], x, key, policy, tag + 4, f"{path}.dt_proj")
     return z, xs, bc, dt_raw
 
 
 def mamba2_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
-                 state: dict | None = None, tag: int = 0x50):
+                 state: dict | None = None, tag: int = 0x50,
+                 path: str = "mamba"):
     """Full-sequence Mamba2 block (train/prefill). Returns (h, final_state)."""
     B, T, d = h.shape
     d_inner, H = _dims(cfg)
     P, N = cfg.ssm_headdim, cfg.ssm_state
     res = h
     x = _rms(p["norm"], h)
-    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag)
+    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag, path)
     if state is None:
         state = init_mamba2_state(cfg, B, h.dtype)
     xs, conv_x_tail = _causal_conv(p["conv_x_w"], p["conv_x_b"], xs,
@@ -175,20 +176,21 @@ def mamba2_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
     y = y + p["D"][None, None, :, None] * xs
     y = y.reshape(B, T, d_inner).astype(z.dtype)
     y = _rms(p["out_norm"], y * jax.nn.silu(z))
-    out = dense(p["out_proj"], y, key, policy, tag + 5)
+    out = dense(p["out_proj"], y, key, policy, tag + 5, f"{path}.out_proj")
     new_state = {"h": h_fin, "conv_x": conv_x_tail, "conv_bc": conv_bc_tail}
     return res + out, new_state
 
 
 def mamba2_decode_step(p, h, state: dict, key, policy: QuantPolicy,
-                       cfg: ArchConfig, tag: int = 0x50):
+                       cfg: ArchConfig, tag: int = 0x50,
+                       path: str = "mamba"):
     """Exact O(1) recurrence for one token. h: (B, 1, d)."""
     B, _, d = h.shape
     d_inner, H = _dims(cfg)
     P, N = cfg.ssm_headdim, cfg.ssm_state
     res = h
     x = _rms(p["norm"], h)
-    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag)
+    z, xs, bc, dt_raw = _project(p, x, key, policy, cfg, tag, path)
     xs, conv_x_tail = _causal_conv(p["conv_x_w"], p["conv_x_b"], xs,
                                    state["conv_x"])
     bc, conv_bc_tail = _causal_conv(p["conv_bc_w"], p["conv_bc_b"], bc,
@@ -203,5 +205,5 @@ def mamba2_decode_step(p, h, state: dict, key, policy: QuantPolicy,
     y = jnp.einsum("bhpn,bn->bhp", hs, Cm) + p["D"][None, :, None] * xs
     y = y.reshape(B, 1, d_inner).astype(z.dtype)
     y = _rms(p["out_norm"], y * jax.nn.silu(z))
-    out = dense(p["out_proj"], y, key, policy, tag + 5)
+    out = dense(p["out_proj"], y, key, policy, tag + 5, f"{path}.out_proj")
     return res + out, {"h": hs, "conv_x": conv_x_tail, "conv_bc": conv_bc_tail}

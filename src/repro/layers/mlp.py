@@ -5,7 +5,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import ArchConfig
 from ..core import QuantPolicy
 from .common import dense, init_dense
 
@@ -23,17 +22,17 @@ def init_mlp(key, d_model: int, d_ff: int, act: str) -> dict:
 
 
 def mlp(p: dict, x: jax.Array, key, policy: QuantPolicy, act: str,
-        tag_base: int = 0x10) -> jax.Array:
+        tag_base: int = 0x10, path: str = "mlp") -> jax.Array:
     if act == "swiglu":
-        g = dense(p["gate"], x, key, policy, tag_base + 1)
-        u = dense(p["up"], x, key, policy, tag_base + 2)
+        g = dense(p["gate"], x, key, policy, tag_base + 1, f"{path}.gate")
+        u = dense(p["up"], x, key, policy, tag_base + 2, f"{path}.up")
         h = jax.nn.silu(g) * u
-        return dense(p["down"], h, key, policy, tag_base + 3)
-    h = dense(p["fc1"], x, key, policy, tag_base + 1)
+        return dense(p["down"], h, key, policy, tag_base + 3, f"{path}.down")
+    h = dense(p["fc1"], x, key, policy, tag_base + 1, f"{path}.fc1")
     if act == "gelu":
         h = jax.nn.gelu(h)
     elif act == "relu2":
         h = jnp.square(jax.nn.relu(h))
     else:
         raise ValueError(f"unknown act {act}")
-    return dense(p["fc2"], h, key, policy, tag_base + 2)
+    return dense(p["fc2"], h, key, policy, tag_base + 2, f"{path}.fc2")

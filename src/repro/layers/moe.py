@@ -38,7 +38,8 @@ def init_moe(key, cfg: ArchConfig) -> dict:
 
 
 def moe_block(p: dict, x: jax.Array, key, policy: QuantPolicy,
-              cfg: ArchConfig, tag_base: int = 0x20, moe_hint=None):
+              cfg: ArchConfig, tag_base: int = 0x20, moe_hint=None,
+              path: str = "moe"):
     """x: (B, T, d) -> (y, aux_loss).
 
     moe_hint(E, C) -> optional NamedSharding for the (E, C, d) dispatch
@@ -50,7 +51,8 @@ def moe_block(p: dict, x: jax.Array, key, policy: QuantPolicy,
     C = expert_capacity(N, cfg)
     xt = x.reshape(N, d)
 
-    logits = dense(p["router"], xt, key, policy, tag_base)          # (N, E)
+    logits = dense(p["router"], xt, key, policy, tag_base,
+                   f"{path}.router")                                # (N, E)
     probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
     top_p, top_i = jax.lax.top_k(probs, K)                          # (N, K)
     top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)
@@ -76,7 +78,7 @@ def moe_block(p: dict, x: jax.Array, key, policy: QuantPolicy,
     # --- expert FFN (vmapped FQT GEMMs, per-expert quantizer stats) -------
     ekeys = jax.random.split(qkey(key, tag_base + 1), E)
     ye = jax.vmap(lambda ep, ex, ek: mlp(ep, ex, ek, policy, cfg.act,
-                                         tag_base + 2))(
+                                         tag_base + 2, f"{path}.expert"))(
         p["experts"], xe, ekeys)                                    # (E, C, d)
     if moe_hint is not None:
         sh = moe_hint(E, C)

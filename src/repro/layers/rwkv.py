@@ -18,7 +18,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core import QuantPolicy
-from .common import dense, init_dense, qkey
+from .common import dense, init_dense
 
 __all__ = ["init_rwkv_layer", "rwkv_layer", "rwkv_decode_step",
            "init_rwkv_state"]
@@ -123,33 +123,35 @@ def _wkv_scan(r, k, v, w, u, s0):
     return jnp.moveaxis(ys, 0, 1), s                            # (B,T,H,hd), state
 
 
-def _time_mix(p, x, x_prev, s0, key, policy, cfg, tag=0x30):
+def _time_mix(p, x, x_prev, s0, key, policy, cfg, tag=0x30, path="rwkv"):
     B = x.shape[0]
     d = cfg.d_model
     hd = cfg.ssm_headdim
     H = d // hd
     xw, xk, xv, xr, xg = _time_mix_inputs(p, x, x_prev)
-    r = dense(p["wr"], xr, key, policy, tag + 1)
-    k = dense(p["wk"], xk, key, policy, tag + 2)
-    v = dense(p["wv"], xv, key, policy, tag + 3)
-    g = jax.nn.silu(dense(p["wg"], xg, key, policy, tag + 4))
+    r = dense(p["wr"], xr, key, policy, tag + 1, f"{path}.wr")
+    k = dense(p["wk"], xk, key, policy, tag + 2, f"{path}.wk")
+    v = dense(p["wv"], xv, key, policy, tag + 3, f"{path}.wv")
+    g = jax.nn.silu(dense(p["wg"], xg, key, policy, tag + 4, f"{path}.wg"))
     w = _decay(p, xw)
     T = x.shape[1]
     rs, ks_, vs, ws = (t.reshape(B, T, H, hd).astype(jnp.float32)
                        for t in (r, k, v, w))
     y, s = _wkv_scan(rs, ks_, vs, ws, p["u"], s0)
     y = _head_groupnorm(p["ln_x"], y.reshape(B, T, d), H).astype(x.dtype)
-    out = dense(p["wo"], y * g, key, policy, tag + 5)
+    out = dense(p["wo"], y * g, key, policy, tag + 5, f"{path}.wo")
     return out, s
 
 
-def _channel_mix(p, x, x_prev, key, policy, tag=0x40):
+def _channel_mix(p, x, x_prev, key, policy, tag=0x40, path="rwkv"):
     sx = x_prev - x
     xk = x + sx * p["cm_mu_k"]
     xr = x + sx * p["cm_mu_r"]
-    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk, key, policy, tag + 1)))
-    kv = dense(p["cm_wv"], k, key, policy, tag + 2)
-    return jax.nn.sigmoid(dense(p["cm_wr"], xr, key, policy, tag + 3)) * kv
+    k = jnp.square(jax.nn.relu(dense(p["cm_wk"], xk, key, policy, tag + 1,
+                                     f"{path}.cm_wk")))
+    kv = dense(p["cm_wv"], k, key, policy, tag + 2, f"{path}.cm_wv")
+    return jax.nn.sigmoid(dense(p["cm_wr"], xr, key, policy, tag + 3,
+                                f"{path}.cm_wr")) * kv
 
 
 def _shift(x):
@@ -158,7 +160,7 @@ def _shift(x):
 
 
 def rwkv_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
-               state: dict | None = None):
+               state: dict | None = None, path: str = "rwkv"):
     """Full-sequence RWKV-6 layer (train/prefill). Returns (h, final_state)."""
     B = h.shape[0]
     s0 = (state["s"] if state is not None
@@ -167,27 +169,28 @@ def rwkv_layer(p, h, key, policy: QuantPolicy, cfg: ArchConfig,
     x1_prev = _shift(x1)
     if state is not None:
         x1_prev = x1_prev.at[:, 0].set(state["x_tm"])
-    att, s = _time_mix(p, x1, x1_prev, s0, key, policy, cfg)
+    att, s = _time_mix(p, x1, x1_prev, s0, key, policy, cfg, path=path)
     h = h + att.astype(h.dtype)
     x2 = _ln(p["ln2"], h)
     x2_prev = _shift(x2)
     if state is not None:
         x2_prev = x2_prev.at[:, 0].set(state["x_cm"])
-    h = h + _channel_mix(p, x2, x2_prev, key, policy).astype(h.dtype)
+    h = h + _channel_mix(p, x2, x2_prev, key, policy,
+                         path=path).astype(h.dtype)
     new_state = {"s": s, "x_tm": x1[:, -1], "x_cm": x2[:, -1]}
     return h, new_state
 
 
 def rwkv_decode_step(p, h, state: dict, key, policy: QuantPolicy,
-                     cfg: ArchConfig):
+                     cfg: ArchConfig, path: str = "rwkv"):
     """One-token step. h: (B, 1, d). O(1) in sequence length."""
     B = h.shape[0]
     x1 = _ln(p["ln1"], h)
     att, s = _time_mix(p, x1, state["x_tm"][:, None], state["s"],
-                       key, policy, cfg)
+                       key, policy, cfg, path=path)
     h = h + att.astype(h.dtype)
     x2 = _ln(p["ln2"], h)
     h = h + _channel_mix(p, x2, state["x_cm"][:, None],
-                         key, policy).astype(h.dtype)
+                         key, policy, path=path).astype(h.dtype)
     new_state = {"s": s, "x_tm": x1[:, 0], "x_cm": x2[:, 0]}
     return h, new_state

@@ -8,18 +8,57 @@ allocation; DESIGN.md Sec. 4, assignment step 2).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
 
-from ..configs.base import SHAPES, ArchConfig, ShapeSpec
-from ..core import QuantPolicy
+from ..configs.base import ArchConfig, ShapeSpec
 from . import encdec, lm
 
-__all__ = ["Model", "build_model"]
+__all__ = ["Model", "build_model", "model_quant_paths"]
 
 f32, i32 = jnp.float32, jnp.int32
+
+_ATTN = ("wq", "wk", "wv", "wo")
+
+
+def model_quant_paths(cfg: ArchConfig) -> tuple:
+    """The logical paths of every quantized GEMM in ``cfg``'s model.
+
+    These are the strings the layers pass as ``dense(..., path=...)``, i.e.
+    what ``QuantPolicy.resolve`` / ``overrides`` match against.  Stacked
+    layers run under ``lax.scan`` (one shared trace), so paths name the role
+    within the stack (``layers.attn.wq``), not a per-layer index.  Used by
+    ``QuantPolicy.spec_table`` to print/assert a config's per-layer
+    precision table (examples/quickstart.py, tests/test_policy_tree.py).
+    """
+    mlp_names = (("gate", "up", "down") if cfg.act == "swiglu"
+                 else ("fc1", "fc2"))
+
+    def block(prefix):
+        return ([f"{prefix}.attn.{w}" for w in _ATTN]
+                + ([f"{prefix}.moe.router"]
+                   + [f"{prefix}.moe.expert.{n}" for n in mlp_names]
+                   if cfg.moe_experts
+                   else [f"{prefix}.mlp.{n}" for n in mlp_names]))
+
+    if cfg.family == "audio":
+        paths = ([f"encoder.layers.attn.{w}" for w in _ATTN]
+                 + [f"encoder.layers.mlp.{n}" for n in mlp_names]
+                 + [f"decoder.layers.self_attn.{w}" for w in _ATTN]
+                 + [f"decoder.layers.cross_attn.{w}" for w in _ATTN]
+                 + [f"decoder.layers.mlp.{n}" for n in mlp_names])
+    elif cfg.family == "hybrid":
+        paths = ([f"layers.mamba.{n}" for n in
+                  ("z_proj", "x_proj", "bc_proj", "dt_proj", "out_proj")]
+                 + block("shared"))
+    elif cfg.ssm_kind == "rwkv6":
+        paths = [f"layers.rwkv.{n}" for n in
+                 ("wr", "wk", "wv", "wg", "wo", "cm_wk", "cm_wv", "cm_wr")]
+    else:
+        paths = block("layers")
+    return tuple(paths + ["lm_head"])
 
 
 @dataclasses.dataclass(frozen=True)
@@ -30,6 +69,11 @@ class Model:
     prefill: Callable                 # (params, batch, policy, max_seq) -> (logits, cache)
     decode: Callable                  # (params, cache, batch, policy) -> (logits, cache)
     init_cache: Callable              # (batch, max_seq, dtype) -> cache
+
+    def quant_paths(self) -> tuple:
+        """Logical paths of this model's quantized GEMMs (policy overrides
+        resolve against these — see :func:`model_quant_paths`)."""
+        return model_quant_paths(self.cfg)
 
     # ------------------------------------------------------------------
     def input_specs(self, shape: ShapeSpec, dtype=jnp.float32) -> Dict[str, Any]:

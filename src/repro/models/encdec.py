@@ -19,7 +19,7 @@ from ..layers import (apply_norm, attention, cross_attention_kv,
                       decode_attention, embed, init_attention, init_embedding,
                       init_kv_cache, init_lm_head, init_mlp, init_norm,
                       lm_head, mlp, sinusoidal_positions)
-from .lm import chunked_head_loss, cross_entropy, scan_or_loop
+from .lm import chunked_head_loss, scan_or_loop
 
 __all__ = ["init_encdec_params", "encdec_loss", "encdec_prefill",
            "encdec_decode", "init_encdec_cache", "MAX_DECODER_POS"]
@@ -70,9 +70,11 @@ def _encode(params, frames, key, policy, cfg, sdpa_hint=None):
         lp, lk = xs
         x = apply_norm(lp["ln1"], hh, cfg.norm)
         hh = hh + attention(lp["attn"], x, lk, policy, cfg, pos,
-                            causal=False, sdpa_hint=sdpa_hint).astype(hh.dtype)
+                            causal=False, sdpa_hint=sdpa_hint,
+                            path="encoder.layers.attn").astype(hh.dtype)
         x = apply_norm(lp["ln2"], hh, cfg.norm)
-        return hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype), 0
+        return hh + mlp(lp["mlp"], x, lk, policy, cfg.act,
+                        path="encoder.layers.mlp").astype(hh.dtype), 0
     keys = jax.random.split(key, cfg.enc_layers)
     h, _ = scan_or_loop(body, h, (params["enc_layers"], keys),
                         cfg.unroll_scan)
@@ -92,20 +94,25 @@ def _decode_seq(params, tokens, enc_out, key, policy, cfg, want_cache=False,
         x = apply_norm(lp["ln1"], hh, cfg.norm)
         if want_cache:
             att, (k, v) = attention(lp["self_attn"], x, lk, policy, cfg, pos,
-                                    return_kv=True, sdpa_hint=sdpa_hint)
+                                    return_kv=True, sdpa_hint=sdpa_hint,
+                                    path="decoder.layers.self_attn")
             skv = {"k": k.reshape(B, T, -1), "v": v.reshape(B, T, -1)}
         else:
             att = attention(lp["self_attn"], x, lk, policy, cfg, pos,
-                            sdpa_hint=sdpa_hint)
+                            sdpa_hint=sdpa_hint,
+                            path="decoder.layers.self_attn")
             skv = 0
         hh = hh + att.astype(hh.dtype)
         x = apply_norm(lp["ln_x"], hh, cfg.norm)
-        ck, cv = cross_attention_kv(lp["cross_attn"], enc_out, lk, policy, cfg)
+        ck, cv = cross_attention_kv(lp["cross_attn"], enc_out, lk, policy,
+                                    cfg, path="decoder.layers.cross_attn")
         hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
                             causal=False, kv_override=(ck, cv),
-                            sdpa_hint=sdpa_hint).astype(hh.dtype)
+                            sdpa_hint=sdpa_hint,
+                            path="decoder.layers.cross_attn").astype(hh.dtype)
         x = apply_norm(lp["ln2"], hh, cfg.norm)
-        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype)
+        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act,
+                      path="decoder.layers.mlp").astype(hh.dtype)
         Sx = enc_out.shape[1]
         xkv = ({"k": ck.reshape(B, Sx, -1), "v": cv.reshape(B, Sx, -1)}
                if want_cache else 0)
@@ -177,7 +184,8 @@ def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
         lp, skv, xkv, lk = xs
         x = apply_norm(lp["ln1"], hh, cfg.norm)
         att, skv = decode_attention(lp["self_attn"], x, skv, index, lk,
-                                    policy, cfg)
+                                    policy, cfg,
+                                    path="decoder.layers.self_attn")
         hh = hh + att.astype(hh.dtype)
         x = apply_norm(lp["ln_x"], hh, cfg.norm)
         Sx = xkv["k"].shape[1]
@@ -185,9 +193,11 @@ def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
         cv = xkv["v"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
         pos = jnp.full((B, 1), index, jnp.int32)
         hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
-                            causal=False, kv_override=(ck, cv)).astype(hh.dtype)
+                            causal=False, kv_override=(ck, cv),
+                            path="decoder.layers.cross_attn").astype(hh.dtype)
         x = apply_norm(lp["ln2"], hh, cfg.norm)
-        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act).astype(hh.dtype)
+        hh = hh + mlp(lp["mlp"], x, lk, policy, cfg.act,
+                      path="decoder.layers.mlp").astype(hh.dtype)
         return hh, skv
     keys = jax.random.split(key, cfg.n_layers)
     h, skvs = scan_or_loop(body, h, (params["dec_layers"], cache["self_kv"],

@@ -96,24 +96,32 @@ def init_lm_params(key, cfg: ArchConfig) -> dict:
 # ---------------------------------------------------------------------------
 
 def _tx_layer(p, h, key, policy, cfg, positions, state=None, sdpa_hint=None,
-              moe_hint=None):
-    """(pre-norm attention + MLP/MoE). state: optional kv dict for prefill."""
+              moe_hint=None, path="layers"):
+    """(pre-norm attention + MLP/MoE). state: optional kv dict for prefill.
+
+    path: policy-resolution prefix for this block's GEMMs — the scanned
+    stack shares one trace, so all stacked layers resolve at the same
+    ``layers.*`` paths (the hybrid model's shared block uses ``shared.*``).
+    """
     x = apply_norm(p["ln1"], h, cfg.norm)
     if state is None:
         att = attention(p["attn"], x, key, policy, cfg, positions,
-                        sdpa_hint=sdpa_hint)
+                        sdpa_hint=sdpa_hint, path=f"{path}.attn")
         kv = None
     else:
         att, (k, v) = attention(p["attn"], x, key, policy, cfg, positions,
-                                return_kv=True, sdpa_hint=sdpa_hint)
+                                return_kv=True, sdpa_hint=sdpa_hint,
+                                path=f"{path}.attn")
         B, S = k.shape[0], k.shape[1]
         kv = {"k": k.reshape(B, S, -1), "v": v.reshape(B, S, -1)}
     h = h + att.astype(h.dtype)
     x = apply_norm(p["ln2"], h, cfg.norm)
     if cfg.moe_experts:
-        y, aux = moe_block(p["moe"], x, key, policy, cfg, moe_hint=moe_hint)
+        y, aux = moe_block(p["moe"], x, key, policy, cfg, moe_hint=moe_hint,
+                           path=f"{path}.moe")
     else:
-        y, aux = mlp(p["mlp"], x, key, policy, cfg.act), 0.0
+        y, aux = mlp(p["mlp"], x, key, policy, cfg.act,
+                     path=f"{path}.mlp"), 0.0
     return h + y.astype(h.dtype), aux, kv
 
 
@@ -138,7 +146,7 @@ def _forward_seq(params, h, key, policy: QuantPolicy, cfg: ArchConfig,
         def body(carry, xs):
             hh = carry
             lp, lk = xs
-            hh, st = rwkv_layer(lp, hh, lk, policy, cfg)
+            hh, st = rwkv_layer(lp, hh, lk, policy, cfg, path="layers.rwkv")
             return _constrain(hh, act_sharding), (st if want_cache else 0)
         if remat:
             body = jax.checkpoint(body)
@@ -176,7 +184,8 @@ def _forward_hybrid(params, h, key, policy, cfg, positions, want_cache,
 
         def inner_body(ih, ixs):
             lp, lk = ixs
-            ih, st = mamba2_layer(lp, ih, lk, policy, cfg)
+            ih, st = mamba2_layer(lp, ih, lk, policy, cfg,
+                                  path="layers.mamba")
             return _constrain(ih, act_sharding), (st if want_cache else 0)
         hh, msts = scan_or_loop(inner_body, hh,
                                 (mp, ikeys[:cfg.hybrid_period]),
@@ -187,10 +196,11 @@ def _forward_hybrid(params, h, key, policy, cfg, positions, want_cache,
         skey = ikeys[-1]
         if want_cache:
             z2, _, kv = _tx_layer(shared, z, skey, policy, cfg, positions,
-                                  state={}, sdpa_hint=sdpa_hint)
+                                  state={}, sdpa_hint=sdpa_hint,
+                                  path="shared")
         else:
             z2, _, kv = _tx_layer(shared, z, skey, policy, cfg, positions,
-                                  sdpa_hint=sdpa_hint)
+                                  sdpa_hint=sdpa_hint, path="shared")
         hh = hh + z2.astype(hh.dtype)
         return _constrain(hh, act_sharding), ((msts, kv) if want_cache else 0)
 
@@ -405,7 +415,8 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
 
             def inner(ih, ixs):
                 lp, lst, lk = ixs
-                ih, st = mamba2_decode_step(lp, ih, lst, lk, policy, cfg)
+                ih, st = mamba2_decode_step(lp, ih, lst, lk, policy, cfg,
+                                            path="layers.mamba")
                 return ih, st
             hh, msts = scan_or_loop(inner, hh,
                                     (mp, mst, ikeys[:cfg.hybrid_period]),
@@ -414,10 +425,12 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
                  @ fuse["w"].astype(hh.dtype))
             x = apply_norm(shared["ln1"], z, cfg.norm)
             att, kvc = decode_attention(shared["attn"], x, kvc, index,
-                                        ikeys[-1], policy, cfg)
+                                        ikeys[-1], policy, cfg,
+                                        path="shared.attn")
             z = z + att.astype(z.dtype)
             x = apply_norm(shared["ln2"], z, cfg.norm)
-            z = z + mlp(shared["mlp"], x, ikeys[-1], policy, cfg.act).astype(z.dtype)
+            z = z + mlp(shared["mlp"], x, ikeys[-1], policy, cfg.act,
+                        path="shared.mlp").astype(z.dtype)
             hh = hh + z
             return hh, (msts, kvc)
         n_outer = cfg.n_layers // cfg.hybrid_period
@@ -429,7 +442,8 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
     elif cfg.ssm_kind == "rwkv6":
         def body(hh, xs):
             lp, lst, lk = xs
-            hh, st = rwkv_decode_step(lp, hh, lst, lk, policy, cfg)
+            hh, st = rwkv_decode_step(lp, hh, lst, lk, policy, cfg,
+                                      path="layers.rwkv")
             return hh, st
         keys = jax.random.split(key, cfg.n_layers)
         h, sts = scan_or_loop(body, h, (params["layers"], cache["state"],
@@ -440,13 +454,15 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
             lp, kvc, lk = xs
             x = apply_norm(lp["ln1"], hh, cfg.norm)
             att, kvc = decode_attention(lp["attn"], x, kvc, index, lk,
-                                        policy, cfg)
+                                        policy, cfg, path="layers.attn")
             hh = hh + att.astype(hh.dtype)
             x = apply_norm(lp["ln2"], hh, cfg.norm)
             if cfg.moe_experts:
-                y, _ = moe_block(lp["moe"], x, lk, policy, cfg)
+                y, _ = moe_block(lp["moe"], x, lk, policy, cfg,
+                                 path="layers.moe")
             else:
-                y = mlp(lp["mlp"], x, lk, policy, cfg.act)
+                y = mlp(lp["mlp"], x, lk, policy, cfg.act,
+                        path="layers.mlp")
             return hh + y.astype(hh.dtype), kvc
         keys = jax.random.split(key, cfg.n_layers)
         h, kvs = scan_or_loop(body, h, (params["layers"], cache["kv"], keys),

@@ -12,7 +12,7 @@ from __future__ import annotations
 import signal
 import threading
 import time
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List
 
 __all__ = ["PreemptionHandler", "StragglerMonitor", "retry",
            "ElasticController"]

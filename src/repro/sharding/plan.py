@@ -17,10 +17,8 @@ Role rules (DESIGN.md Sec. 4):
 
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding
 from jax.sharding import PartitionSpec as P
 

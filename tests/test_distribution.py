@@ -5,12 +5,10 @@ jax initializes, and the assignment forbids setting it globally for the test
 session (smoke tests must see 1 device).
 """
 
-import json
 import os
 import subprocess
 import sys
 
-import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

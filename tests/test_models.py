@@ -9,7 +9,7 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.configs import ARCH_NAMES, get_config, shape_grid, SHAPES
+from repro.configs import ARCH_NAMES, get_config, shape_grid
 from repro.core import QuantPolicy
 from repro.models import build_model
 

@@ -1,0 +1,349 @@
+"""Role-based quantizer API: registry, per-layer resolution, legacy surface.
+
+The acceptance contract of the policy-tree redesign:
+
+  * ``QuantPolicy.resolve(path)`` turns global defaults + ordered regex
+    overrides into one ``GemmQuantConfig`` per layer — last match wins
+    field-wise, partial specs merge over what they override;
+  * third-party quantizers plug in through ``register_quantizer`` without
+    touching core/fqt.py;
+  * a heterogeneous policy (exact lm_head + 8-bit attention + 4-bit-BHQ MLP
+    agrad) is constructible purely from config and trains a step on all
+    three backends;
+  * the legacy surface (``exact/qat/fqt`` factories, ``mode=``,
+    ``grad_quantizer=``, ``policy.mode``) keeps working.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import (GemmQuantConfig, QuantPolicy, Quantizer,
+                        QuantizerSpec, RoleOverride, available_quantizers,
+                        fqt_matmul, get_quantizer, quantize_ptq_stoch,
+                        register_quantizer)
+from repro.models import build_model, model_quant_paths
+
+BACKENDS = ("simulate", "native", "pallas")
+
+
+def hetero_policy(backend="simulate", interpret=None):
+    """Exact lm_head/embed + 8-bit attention + 4-bit-BHQ MLP agrad."""
+    return QuantPolicy.fqt("bhq", 8, bhq_block=16, backend=backend,
+                           pallas_interpret=interpret, overrides={
+                               r"lm_head|embed": "exact",
+                               r"layers\.attn\.": 8,
+                               r"layers\.mlp\.": {"agrad": ("bhq", 4)},
+                           })
+
+
+# ---------------------------------------------------------------------------
+# resolve(): defaults, precedence, partial-spec merging
+# ---------------------------------------------------------------------------
+
+def test_resolve_defaults_match_global_fields():
+    pol = QuantPolicy.fqt("psq", 5, act_bits=7, weight_bits=6, wgrad_bits=4)
+    cfg = pol.resolve("anything.at.all")
+    assert cfg.fwd_act == QuantizerSpec("ptq_det", 7)
+    assert cfg.fwd_weight == QuantizerSpec("ptq_det", 6)
+    assert cfg.wgrad == QuantizerSpec("ptq", 4)
+    assert cfg.agrad == QuantizerSpec("psq", 5)
+    assert cfg.backend == pol.backend
+
+
+def test_resolve_no_path_and_no_match_keep_defaults():
+    pol = hetero_policy()
+    assert pol.resolve() == pol._default_gemm_config()
+    assert pol.resolve("unmatched.path") == pol._default_gemm_config()
+
+
+def test_resolve_last_match_wins_fieldwise():
+    pol = QuantPolicy.fqt("bhq", 8, overrides=(
+        (r"layers\.", {"agrad": ("psq", 6)}),
+        (r"layers\.mlp", {"agrad": {"bits": 3}}),   # partial: name inherited
+        (r"layers\.mlp\.up", "exact"),
+    ))
+    assert pol.resolve("layers.attn.wq").agrad == QuantizerSpec("psq", 6)
+    # second override keeps psq (empty name inherits), rewrites bits only
+    assert pol.resolve("layers.mlp.down").agrad == QuantizerSpec("psq", 3)
+    # later exact pin beats both earlier matches
+    assert pol.resolve("layers.mlp.up").describe() == "exact"
+    assert not pol.resolve("layers.mlp.up").quantize_fwd
+
+
+def test_partial_spec_merges_params_and_bits_over_default():
+    pol = QuantPolicy.fqt("bhq", 6, bhq_block=64, overrides={
+        # same quantizer: params merge over the default's block_rows
+        r"mlp": {"agrad": {"bits": 4, "g_search": "paper"}},
+    })
+    spec = pol.resolve("layers.mlp.up").agrad
+    assert spec.name == "bhq" and spec.bits == 4
+    assert spec.param("block_rows") == 64          # inherited
+    assert spec.param("g_search") == "paper"       # overridden
+    # different quantizer: base params do NOT leak across names
+    pol2 = QuantPolicy.fqt("bhq", 6, bhq_block=64,
+                           overrides={r"mlp": {"agrad": "psq"}})
+    spec2 = pol2.resolve("layers.mlp.up").agrad
+    assert spec2 == QuantizerSpec("psq", 6)        # bits inherited, no params
+
+
+def test_bits_override_applies_to_all_quantized_roles():
+    pol = QuantPolicy.fqt("bhq", 8, overrides={r"attn": 5})
+    cfg = pol.resolve("layers.attn.wq")
+    assert {cfg.fwd_act.bits, cfg.fwd_weight.bits,
+            cfg.wgrad.bits, cfg.agrad.bits} == {5}
+    # QAT: backward roles stay None under a bits override
+    qat = QuantPolicy.qat(overrides={r"attn": 5})
+    cfg = qat.resolve("layers.attn.wq")
+    assert cfg.fwd_act.bits == 5 and cfg.wgrad is None and cfg.agrad is None
+
+
+def test_explicit_role_bits_beat_blanket_bits_in_same_override():
+    pol = QuantPolicy.fqt("bhq", 8, overrides={
+        r"mlp": {"bits": 4, "agrad": "psq:6"}})
+    cfg = pol.resolve("layers.mlp.up")
+    assert cfg.agrad == QuantizerSpec("psq", 6)    # most specific wins
+    assert cfg.wgrad.bits == 4                     # blanket still applies
+    # blanket bits feed a role spec that doesn't pin its own bits
+    pol2 = QuantPolicy.fqt("bhq", 8, overrides={
+        r"mlp": {"bits": 4, "agrad": "psq"}})
+    assert pol2.resolve("layers.mlp.up").agrad == QuantizerSpec("psq", 4)
+
+
+def test_stochastic_quantizer_rejected_on_forward_role():
+    x, w, k = (jax.random.normal(jax.random.PRNGKey(0), (8, 16)),
+               jax.random.normal(jax.random.PRNGKey(1), (16, 4)),
+               jax.random.PRNGKey(2))
+    pol = QuantPolicy.fqt("bhq", 8, overrides={r"mlp": {"fwd": "ptq"}})
+    with pytest.raises(ValueError, match="stochastic.*forward role"):
+        fqt_matmul(x, w, k, pol, path="layers.mlp.up")
+
+
+def test_partial_forward_exact_with_quantized_backward_rejected():
+    pol = QuantPolicy.fqt("bhq", 4, overrides={r"mlp": {"fwd_act": "exact"}})
+    with pytest.raises(ValueError, match="backward roles are quantized"):
+        pol.resolve("layers.mlp.up")
+    # directly-passed configs are validated too (no silent exact no-op)
+    x, w, k = _xwk(7)
+    bad = GemmQuantConfig(agrad=QuantizerSpec("psq", 4))
+    with pytest.raises(ValueError, match="backward roles are quantized"):
+        fqt_matmul(x, w, k, bad)
+    # a later whole-layer "exact" pin still repairs an earlier partial pin
+    ok = QuantPolicy.fqt("bhq", 4, overrides=(
+        (r"mlp", {"fwd_act": "exact"}), (r"mlp", "exact")))
+    assert ok.resolve("layers.mlp.up").describe() == "exact"
+    # QAT (no backward roles): one-sided forward exact is rejected too —
+    # the forward roles travel together
+    qat = QuantPolicy.qat(overrides={r"mlp": {"fwd_weight": "exact"}})
+    with pytest.raises(ValueError, match="travel together"):
+        qat.resolve("layers.mlp.up")
+
+
+def test_out_of_range_spec_bits_rejected_at_resolution():
+    for bad in (16, 1, 0):
+        pol = QuantPolicy.fqt("bhq", 8, overrides={r"attn": bad})
+        with pytest.raises(ValueError, match=r"bits must be an int"):
+            pol.resolve("layers.attn.wq")
+    pol = QuantPolicy.fqt("bhq", 8, overrides={r"mlp": {"agrad": "bhq:99"}})
+    with pytest.raises(ValueError, match=r"agrad=bhq:99"):
+        pol.resolve("layers.mlp.up")
+    x, w, k = _xwk(8)
+    bad_cfg = GemmQuantConfig(fwd_act=QuantizerSpec("ptq_det", 16),
+                              fwd_weight=QuantizerSpec("ptq_det", 8))
+    with pytest.raises(ValueError, match=r"fwd_act=ptq_det:16"):
+        fqt_matmul(x, w, k, bad_cfg)
+
+
+def test_nameless_override_on_unquantized_role_rejected():
+    # QAT has no backward default: a bits-only agrad override can't merge
+    qat = QuantPolicy.qat(overrides={r"mlp": {"agrad": {"bits": 4}}})
+    with pytest.raises(ValueError, match="no quantizer to inherit"):
+        qat.resolve("layers.mlp.up")
+    # naming the quantizer makes the same request valid
+    qat2 = QuantPolicy.qat(overrides={r"mlp": {"fwd": "ptq_det",
+                                               "wgrad": "ptq:8",
+                                               "agrad": "psq:4"}})
+    assert qat2.resolve("layers.mlp.up").agrad == QuantizerSpec("psq", 4)
+
+
+def test_role_override_coercions_and_errors():
+    ov = RoleOverride.of({"fwd": ("ptq_det", 4), "agrad": "psq:3"})
+    assert ov.fwd_act == ov.fwd_weight == QuantizerSpec("ptq_det", 4)
+    assert ov.agrad == QuantizerSpec("psq", 3)
+    with pytest.raises(ValueError, match="unknown override keys"):
+        RoleOverride.of({"agard": "psq"})           # typo'd role name
+    with pytest.raises(TypeError):
+        RoleOverride.of(3.5)
+    with pytest.raises(ValueError, match="invalid override pattern"):
+        QuantPolicy.fqt(overrides={"(": "exact"})   # bad regex fails up front
+
+
+def test_spec_table_is_asserted_form():
+    pol = hetero_policy()
+    table = dict(pol.spec_table(model_quant_paths(
+        get_config("statquant-tx", smoke=True))))
+    assert table["lm_head"] == "exact"
+    assert table["layers.attn.wq"] == (
+        "fwd=ptq_det:8/ptq_det:8 wgrad=ptq:8 agrad=bhq:8(block_rows=16)")
+    assert table["layers.mlp.fc1"] == (
+        "fwd=ptq_det:8/ptq_det:8 wgrad=ptq:8 agrad=bhq:4(block_rows=16)")
+
+
+# ---------------------------------------------------------------------------
+# fqt_matmul under per-layer resolution / direct GemmQuantConfig
+# ---------------------------------------------------------------------------
+
+def _xwk(seed=0):
+    kx, kw, kk = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return (jax.random.normal(kx, (16, 24)),
+            jax.random.normal(kw, (24, 8)) * 0.3, kk)
+
+
+def test_exact_pinned_path_is_plain_matmul():
+    x, w, k = _xwk()
+    pol = hetero_policy()
+    np.testing.assert_allclose(
+        np.asarray(fqt_matmul(x, w, k, pol, path="lm_head")),
+        np.asarray(x @ w), rtol=1e-6)
+    gx = jax.grad(lambda a: jnp.sum(
+        fqt_matmul(a, w, k, pol, path="lm_head") ** 2))(x)
+    gx_ref = jax.grad(lambda a: jnp.sum((a @ w) ** 2))(x)
+    np.testing.assert_allclose(np.asarray(gx), np.asarray(gx_ref), rtol=1e-5)
+
+
+def test_direct_gemm_quant_config_and_partial_backward():
+    """Role-level API without a QuantPolicy; single-sided backward quant."""
+    x, w, k = _xwk(1)
+    base = GemmQuantConfig(fwd_act=QuantizerSpec("ptq_det", 8),
+                           fwd_weight=QuantizerSpec("ptq_det", 8))
+    qat_dx = jax.grad(lambda a: jnp.sum(fqt_matmul(a, w, k, base) ** 2))(x)
+    # quantize only wgrad: dX must stay the deterministic QAT gradient
+    import dataclasses
+    wonly = dataclasses.replace(base, wgrad=QuantizerSpec("ptq", 8))
+    dx = jax.grad(lambda a: jnp.sum(fqt_matmul(a, w, k, wonly) ** 2))(x)
+    np.testing.assert_array_equal(np.asarray(dx), np.asarray(qat_dx))
+    # quantize only agrad: dW must stay the QAT gradient, dX stochastic
+    aonly = dataclasses.replace(base, agrad=QuantizerSpec("psq", 4))
+    qat_dw = jax.grad(lambda b: jnp.sum(fqt_matmul(x, b, k, base) ** 2))(w)
+    dw = jax.grad(lambda b: jnp.sum(fqt_matmul(x, b, k, aonly) ** 2))(w)
+    np.testing.assert_array_equal(np.asarray(dw), np.asarray(qat_dw))
+    dx2 = jax.grad(lambda a: jnp.sum(fqt_matmul(a, w, k, aonly) ** 2))(x)
+    assert not np.allclose(np.asarray(dx2), np.asarray(qat_dx))
+
+
+# ---------------------------------------------------------------------------
+# registry: third-party quantizers plug in without touching fqt.py
+# ---------------------------------------------------------------------------
+
+class _Identity8(Quantizer):
+    name = "test_id8"
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        return quantize_ptq_stoch(x2d, key, spec.bits or 8)
+
+
+def test_register_and_use_custom_quantizer():
+    register_quantizer("test_id8", _Identity8(), overwrite=True)
+    assert "test_id8" in available_quantizers()
+    x, w, k = _xwk(2)
+    pol = QuantPolicy.fqt("test_id8", 6)           # as the global default
+    g = jax.grad(lambda a: jnp.sum(fqt_matmul(a, w, k, pol) ** 2))(x)
+    assert bool(jnp.all(jnp.isfinite(g)))
+    # and per-layer, through an override
+    pol2 = QuantPolicy.fqt("bhq", 8,
+                           overrides={r"mlp": {"agrad": "test_id8:5"}})
+    assert pol2.resolve("layers.mlp.up").agrad == QuantizerSpec("test_id8", 5)
+    g2 = jax.grad(lambda a: jnp.sum(
+        fqt_matmul(a, w, k, pol2, path="layers.mlp.up") ** 2))(x)
+    assert bool(jnp.all(jnp.isfinite(g2)))
+
+
+def test_registry_errors():
+    with pytest.raises(ValueError, match="already registered"):
+        register_quantizer("bhq", _Identity8())
+    with pytest.raises(ValueError, match="registered:"):
+        get_quantizer("definitely_not_registered")
+
+
+# ---------------------------------------------------------------------------
+# heterogeneous policy trains a step on all three backends
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_heterogeneous_policy_trains_one_step(backend):
+    import dataclasses as dc
+    # shrunk below even the smoke config: the pallas case runs the whole
+    # backward in interpret mode, and tier-1 must stay fast (memory rule)
+    cfg = dc.replace(get_config("statquant-tx", smoke=True),
+                     d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                     d_ff=48, vocab_size=127, vocab_pad_to=64)
+    model = build_model(cfg)
+    pol = hetero_policy(backend, interpret=True if backend == "pallas" else None)
+    params = model.init(jax.random.PRNGKey(0))
+    batch = {"tokens": jnp.ones((2, 8), jnp.int32),
+             "labels": jnp.ones((2, 8), jnp.int32)}
+    loss, grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch, jax.random.PRNGKey(1), pol)[0])(params)
+    assert bool(jnp.isfinite(loss))
+    leaves = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in leaves)
+    assert any(float(jnp.abs(g).max()) > 0 for g in leaves)
+    if backend == "simulate":
+        # the exact pin is live through the model: the lm_head gradient is
+        # h.T @ dlogits with both operands deterministic, so it must be
+        # key-independent, while a quantized layer's wgrad (stochastic Q_b1)
+        # must change with the key
+        grads2 = jax.grad(
+            lambda p: model.loss(p, batch, jax.random.PRNGKey(2), pol)[0])(params)
+        np.testing.assert_array_equal(np.asarray(grads["lm_head"]["w"]),
+                                      np.asarray(grads2["lm_head"]["w"]))
+        # wv (not wq: uniform test tokens leave score grads ~0)
+        assert not np.allclose(np.asarray(grads["layers"]["attn"]["wv"]["w"]),
+                               np.asarray(grads2["layers"]["attn"]["wv"]["w"]))
+
+
+# ---------------------------------------------------------------------------
+# legacy surface
+# ---------------------------------------------------------------------------
+
+def test_legacy_factories_and_mode_alias():
+    x, w, k = _xwk(3)
+    assert not QuantPolicy.exact().enabled
+    np.testing.assert_allclose(
+        np.asarray(fqt_matmul(x, w, k, QuantPolicy.exact())),
+        np.asarray(x @ w), rtol=1e-6)
+    pol = QuantPolicy.fqt(grad_quantizer="psq", grad_bits=5, mode="native")
+    assert pol.backend == "native" and pol.mode == "native"
+    assert pol.resolve("").agrad == QuantizerSpec("psq", 5)
+    qat = QuantPolicy.qat(mode="simulate")
+    assert not qat.quantize_bwd and qat.mode == "simulate"
+    # explicit backend= wins over legacy mode=
+    assert QuantPolicy.fqt(backend="pallas", mode="native").backend == "pallas"
+
+
+def test_invalid_legacy_mode_raises_named_valueerror():
+    with pytest.raises(ValueError, match=r"mode='gpu'"):
+        QuantPolicy.fqt("bhq", 5, mode="gpu")
+    with pytest.raises(ValueError, match=r"backend='tpu_magic'"):
+        QuantPolicy.qat(backend="tpu_magic")
+    with pytest.raises(ValueError, match="unknown backend"):
+        QuantPolicy(backend="cuda")
+
+
+@pytest.mark.parametrize("field", ["act_bits", "weight_bits", "wgrad_bits",
+                                   "grad_bits", "dp_grad_bits"])
+@pytest.mark.parametrize("bad", [1, 9, 0, "8"])
+def test_all_bit_fields_validated(field, bad):
+    with pytest.raises(ValueError, match=field):
+        QuantPolicy(**{field: bad})
+
+
+def test_bhq_block_and_grad_quantizer_validated():
+    with pytest.raises(ValueError, match="bhq_block"):
+        QuantPolicy(bhq_block=0)
+    with pytest.raises(ValueError, match="bhq_block"):
+        QuantPolicy(bhq_block=-64)
+    with pytest.raises(ValueError, match="unknown quantizer"):
+        QuantPolicy(grad_quantizer="nope")

@@ -1,8 +1,6 @@
 """Fault-tolerance runtime: straggler detection, retry, elastic policy."""
 
 import signal
-import threading
-import time
 
 import pytest
 
