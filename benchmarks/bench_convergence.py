@@ -13,16 +13,15 @@ import os
 
 from repro.configs import get_config
 from repro.core import QuantPolicy
-from repro.launch.train import train_loop
+from repro.engine import Engine
 
 STEPS = int(os.environ.get("BENCH_CONV_STEPS", "60"))
 
 
 def _run(policy, steps=STEPS, seed=0):
     cfg = get_config("statquant-tx", smoke=True)
-    _, _, hist = train_loop(cfg, policy, steps=steps, batch_size=8,
-                            seq_len=32, lr=4e-3, log_every=max(steps // 8, 1),
-                            seed=seed, log_fn=lambda *a: None)
+    hist = Engine(cfg, policy, steps=steps, batch_size=8, seq_len=32,
+                  lr=4e-3, seed=seed, log_fn=None).run()
     return hist[-1][1]
 
 

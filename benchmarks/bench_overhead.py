@@ -42,4 +42,13 @@ def run(n: int = 1024, d: int = 1024, k: int = 1024):
     t_range_r = time_us(jax.jit(lambda x: (jnp.min(x, 1), jnp.max(x, 1))), g)
     rows.append(("overhead/range_per_tensor", t_range_t, t_range_t / t_mm))
     rows.append(("overhead/range_per_sample", t_range_r, t_range_r / t_mm))
+
+    # TrainState donation win: the whole-state in-place update vs the
+    # double-buffered one (engine step, chained-state timing — derived
+    # column is the speedup of the donated variant)
+    from .bench_train_step import time_step
+    t_don = time_step(True, 1) * 1e6      # positional: shares the lru_cache
+    t_nodon = time_step(False, 1) * 1e6   # key with bench_train_step.run()
+    rows.append(("overhead/train_step_donated", t_don, t_nodon / t_don))
+    rows.append(("overhead/train_step_undonated", t_nodon, t_nodon / t_don))
     return rows

@@ -1,0 +1,74 @@
+"""Engine step throughput: steps/sec and tokens/sec, with and without
+TrainState buffer donation and gradient accumulation.
+
+Donation (``jax.jit(..., donate_argnums=(0,))`` on the whole TrainState)
+lets XLA update params + optimizer moments in place instead of
+double-buffering them — the win this suite measures (and the dry-run's
+``alias_bytes`` accounts for at production scale).  Accumulation trades
+step latency for activation memory (lax.scan over microbatches).
+
+Timing protocol: steps are *chained* (state_{t+1} = step(state_t, batch)),
+matching how a donated step actually runs — a donated input buffer cannot
+be fed twice, so the usual repeat-same-args timing would be invalid.
+
+Results are dumped to ``BENCH_train.json`` so later perf PRs have a
+trajectory to compare against (same convention as ``BENCH_kernels.json``).
+"""
+
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.engine import Engine
+
+BENCH_JSON = os.environ.get("BENCH_TRAIN_JSON", "BENCH_train.json")
+STEPS = int(os.environ.get("BENCH_TRAIN_STEPS", "20"))
+BATCH, SEQ = 8, 32
+
+
+@functools.lru_cache(maxsize=None)   # bench_overhead reuses our variants
+def time_step(donate: bool, accum: int, batch: int = BATCH, seq: int = SEQ,
+              steps: int = STEPS) -> float:
+    """Seconds per optimizer step, steady-state (chained states)."""
+    cfg = get_config("statquant-tx", smoke=True)
+    pol = QuantPolicy.fqt("bhq", 5, bhq_block=32)
+    eng = Engine(cfg, pol, steps=steps, batch_size=batch, seq_len=seq,
+                 donate=donate, accum_steps=accum, log_fn=None)
+    state = eng.init_state()
+    batches = [eng.loader.get(s) for s in range(2)]
+    state, _ = eng.step_fn(state, batches[0])          # compile + warmup
+    jax.block_until_ready(state.params)
+    t0 = time.perf_counter()
+    for s in range(steps):
+        state, _ = eng.step_fn(state, batches[s % 2])
+    jax.block_until_ready(state.params)
+    return (time.perf_counter() - t0) / steps
+
+
+def run():
+    rows = []
+    record = {"batch": BATCH, "seq": SEQ, "steps_timed": STEPS,
+              "variants": {}}
+    for donate in (True, False):
+        for accum in (1, 2, 4):
+            dt = time_step(donate, accum)
+            name = f"donate={int(donate)}_accum={accum}"
+            record["variants"][name] = {
+                "sec_per_step": dt,
+                "steps_per_sec": 1.0 / dt,
+                "tokens_per_sec": BATCH * SEQ / dt,
+            }
+            rows.append((f"train_step/{name}", dt * 1e6, 1.0 / dt))
+    base = record["variants"]["donate=1_accum=1"]["sec_per_step"]
+    undon = record["variants"]["donate=0_accum=1"]["sec_per_step"]
+    record["donation_speedup"] = undon / base
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    return rows

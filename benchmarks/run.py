@@ -7,6 +7,7 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
   table1_*   convergence vs (quantizer x bits)         (paper Table 1 proxy)
   overhead_* quantization overhead vs GEMM             (paper Sec. 4.3)
   kernel_*   kernel timings + TPU-target properties
+  train_*    engine step throughput (donation x accumulation)
 
 Select suites with ``python -m benchmarks.run fig3 table1 ...`` (default all).
 """
@@ -19,7 +20,7 @@ import traceback
 
 def main() -> None:
     from . import (bench_bins, bench_convergence, bench_kernels,
-                   bench_overhead, bench_variance)
+                   bench_overhead, bench_train_step, bench_variance)
 
     suites = {
         "fig3": bench_variance.run,
@@ -27,6 +28,7 @@ def main() -> None:
         "table1": bench_convergence.run,
         "overhead": bench_overhead.run,
         "kernel": bench_kernels.run,
+        "train": bench_train_step.run,
     }
     selected = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

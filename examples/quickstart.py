@@ -84,14 +84,16 @@ def main():
         print("[dry-run] skipping training")
         return
 
-    from repro.launch.train import train_loop
+    from repro.engine import Engine
     print("\n--- QAT (quantized forward, fp32 backward) ---")
-    _, _, qat_hist = train_loop(cfg, QuantPolicy.qat(),
-                                steps=60, batch_size=8, seq_len=32, lr=4e-3)
+    qat_hist = Engine(cfg, QuantPolicy.qat(), steps=60, batch_size=8,
+                      seq_len=32, lr=4e-3).run()
 
     print("\n--- FQT, mixed-precision policy tree (5-bit BHQ default) ---")
-    _, _, fqt_hist = train_loop(cfg, policy,
-                                steps=60, batch_size=8, seq_len=32, lr=4e-3)
+    # accum_steps=2: the same 60 steps as two microbatches each, SR noise
+    # independent per microbatch (the engine's lax.scan accumulation)
+    fqt_hist = Engine(cfg, policy, steps=60, batch_size=8, seq_len=32,
+                      lr=4e-3, accum_steps=2).run()
 
     print(f"\nfinal loss  QAT: {qat_hist[-1][1]:.4f}   "
           f"heterogeneous FQT: {fqt_hist[-1][1]:.4f}")

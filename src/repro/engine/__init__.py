@@ -1,0 +1,48 @@
+"""Training engine: the single way a training step is built and run.
+
+Every entry point (``launch/train.py`` CLI, ``launch/dryrun.py`` AOT
+compiles, examples, convergence benches) goes through this package instead
+of hand-rolling its own loop.  Three layers:
+
+``state``  :class:`TrainState` — one pytree ``(params, opt_state, step,
+           rng)`` with a sharding tree derived from the
+           :class:`~repro.sharding.ShardingPlan`, so the compiled step runs
+           with explicit ``in_shardings == out_shardings`` over a real mesh
+           and the whole state donated (no double-buffered update).
+
+``step``   :func:`make_step_fn` — FQT loss/grad (per-layer role policies,
+           all three backends), gradient accumulation via ``lax.scan`` with
+           per-microbatch SR key folding (quantization noise independent
+           across microbatches, Theorem 1's independence requirement), the
+           compressed cross-pod all-reduce, clipping, and the optimizer
+           update.  :func:`jit_step` compiles it, sharded and donated.
+
+``engine`` :class:`Engine` — ``Engine.run()`` drives the loop with
+           prefetch, async whole-state checkpointing, preemption
+           checkpoint-and-exit, and straggler monitoring.  Resume is exact:
+           loader position and rng stream live in the checkpoint.
+
+TrainState lifecycle::
+
+    init_train_state(model, opt, seed)        # fresh: step=0, split rng
+      -> Engine.run() steps it (donated in, new buffers out)
+      -> CheckpointManager.save(state.as_dict())  every ckpt_every
+      -> restore: Engine.restore_state() device_puts onto THIS mesh's
+         shardings (elastic across mesh shapes), loader fast-forwards to
+         state.step, rng stream continues -> bit-identical continuation.
+
+Migration from the old ``launch.train`` surface: ``train_loop(...)`` is now
+a thin wrapper over ``Engine(...).run()`` (same signature, plus
+``mesh=``/``accum_steps=``/``donate=``); ``make_train_step`` is replaced by
+:func:`make_step_fn`, which takes/returns a TrainState instead of loose
+``(params, opt_state, step, key)``.
+"""
+
+from .engine import Engine
+from .state import (TrainState, abstract_train_state, init_train_state,
+                    state_shardings, state_specs)
+from .step import jit_step, make_step_fn, split_microbatches
+
+__all__ = ["Engine", "TrainState", "init_train_state",
+           "abstract_train_state", "state_specs", "state_shardings",
+           "make_step_fn", "jit_step", "split_microbatches"]

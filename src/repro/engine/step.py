@@ -1,0 +1,128 @@
+"""The training step, built once: FQT loss/grad, gradient accumulation,
+compressed DP all-reduce, clipping, optimizer update — over a TrainState.
+
+``make_step_fn`` returns the pure ``(state, batch) -> (state, metrics)``
+function; ``jit_step`` compiles it the way a production job runs it —
+explicit ``in_shardings``/``out_shardings`` from the sharding plan and the
+whole state donated.
+
+RNG contract (paper Theorem 1 needs independent SR draws): every step
+*splits* ``state.rng`` into (per-step base, next stream).  Microbatch ``i``
+quantizes under ``fold_in(base, i)`` — SR noise is independent across
+microbatches and across steps, and because the stream lives in the
+checkpointed state, a resumed run replays bit-identical draws.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.compression import compressed_grad_allreduce
+from ..optim import clip_by_global_norm
+from .state import TrainState, state_shardings
+
+__all__ = ["make_step_fn", "jit_step", "split_microbatches"]
+
+
+def split_microbatches(batch: dict, accum_steps: int) -> dict:
+    """Reshape every batch leaf's batch dim into (accum_steps, micro, ...).
+
+    The batch dim is axis 0 for every input except the VLM m-rope
+    ``positions`` leaf, which is (3, B, T) — mirrored from
+    ``ShardingPlan.batch_spec``.  Raises ValueError naming the first leaf
+    whose batch dim doesn't divide.
+    """
+    def split(path, x):
+        ps = jax.tree_util.keystr(path)
+        axis = 1 if ("positions" in ps and x.ndim == 3) else 0
+        if x.shape[axis] % accum_steps:
+            raise ValueError(
+                f"batch leaf {ps} dim {axis} ({x.shape[axis]}) not divisible "
+                f"by accum_steps={accum_steps}")
+        micro = x.shape[axis] // accum_steps
+        x = x.reshape(x.shape[:axis] + (accum_steps, micro) + x.shape[axis + 1:])
+        return jnp.moveaxis(x, axis, 0) if axis else x
+
+    return jax.tree_util.tree_map_with_path(split, batch)
+
+
+def make_step_fn(model, policy, opt, lr_fn, *, clip_norm: float = 1.0,
+                 remat: bool = True, accum_steps: int = 1, mesh=None,
+                 compress_axis: str | None = None,
+                 loss_kwargs: dict | None = None):
+    """Build the pure training step over a :class:`TrainState`.
+
+    accum_steps: number of microbatches the global batch is split into;
+    gradients are accumulated with ``lax.scan`` (activation memory of one
+    microbatch) and averaged — identical in expectation to the full-batch
+    step, with independent SR draws per microbatch.
+
+    compress_axis: mesh axis over which gradients are exchanged with the
+    unbiased int8 compressed all-reduce instead of GSPMD's implicit fp32
+    psum (beyond-paper, DESIGN.md Sec. 4).  Requires ``mesh``.
+    """
+    if accum_steps < 1:
+        raise ValueError(f"accum_steps must be >= 1, got {accum_steps}")
+    kw = dict(loss_kwargs or {})
+
+    def loss_and_grads(params, batch, key):
+        def loss_fn(p):
+            return model.loss(p, batch, key, policy, remat=remat, **kw)
+        (loss, mets), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        return loss, mets, grads
+
+    def step_fn(state: TrainState, batch):
+        # base_key feeds fold_in(., microbatch_i); compress_key is a sibling
+        # split so the DP-compression SR draws can never alias a microbatch
+        # key, whatever accum_steps is
+        base_key, compress_key, next_rng = jax.random.split(state.rng, 3)
+        if accum_steps == 1:
+            loss, mets, grads = loss_and_grads(
+                state.params, batch, jax.random.fold_in(base_key, 0))
+        else:
+            micro = split_microbatches(batch, accum_steps)
+
+            def micro_step(g_acc, inp):
+                i, mb = inp
+                l, m, g = loss_and_grads(state.params, mb,
+                                         jax.random.fold_in(base_key, i))
+                return jax.tree.map(jnp.add, g_acc, g), (l, m)
+
+            zeros = jax.tree.map(jnp.zeros_like, state.params)
+            g_sum, (losses, mets_stack) = jax.lax.scan(
+                micro_step, zeros, (jnp.arange(accum_steps), micro))
+            grads = jax.tree.map(lambda g: g / accum_steps, g_sum)
+            loss = jnp.mean(losses)
+            mets = jax.tree.map(jnp.mean, mets_stack)
+
+        if compress_axis is not None:
+            grads = compressed_grad_allreduce(
+                grads, mesh, compress_axis, compress_key,
+                bits=policy.dp_grad_bits, mean=True)
+        grads, gnorm = clip_by_global_norm(grads, clip_norm)
+        lr = lr_fn(state.step)
+        params, opt_state = opt.apply(state.params, grads, state.opt_state, lr)
+        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **mets}
+        return TrainState(params=params, opt_state=opt_state,
+                          step=state.step + 1, rng=next_rng), metrics
+
+    return step_fn
+
+
+def jit_step(step_fn, *, plan=None, abstract_state: TrainState | None = None,
+             batch_shardings=None, donate: bool = True):
+    """Compile a step: donated state, plan-derived in/out shardings.
+
+    Without a plan this is plain ``jax.jit`` (single-device path); with one,
+    the state round-trips through identical shardings so no resharding
+    collectives surround the step.
+    """
+    donate_argnums = (0,) if donate else ()
+    if plan is None:
+        return jax.jit(step_fn, donate_argnums=donate_argnums)
+    st_sh = state_shardings(plan, abstract_state)
+    return jax.jit(step_fn,
+                   in_shardings=(st_sh, batch_shardings),
+                   out_shardings=(st_sh, None),
+                   donate_argnums=donate_argnums)

@@ -46,12 +46,12 @@ jax.config.update("jax_persistent_cache_min_compile_time_secs", 10)
 
 from ..configs import ARCH_NAMES, SHAPES, get_config, shape_grid
 from ..core import QuantPolicy
+from ..engine import abstract_train_state, jit_step, make_step_fn
 from ..models import build_model
 from ..optim import sgd
 from ..sharding import make_plan
 from .mesh import make_production_mesh
 from .roofline import collective_bytes, model_flops, roofline_terms
-from .train import make_train_step
 
 __all__ = ["run_cell", "main"]
 
@@ -97,27 +97,21 @@ def _compile(cfg, shape, plan, policy, opt, sp: bool = True,
     b_specs = plan.batch_specs(specs_in["batch"])
 
     if shape.kind == "train":
-        abstract_opt = jax.eval_shape(lambda: opt.init(abstract_params))
-        o_specs = plan.param_specs(abstract_opt)   # same substring rules
         act_sh = _act_sharding(plan, shape) if sp else None
         extra_kwargs = dict(extra_kwargs)
         compress_axis = extra_kwargs.pop("compress_axis", None)
         remat = extra_kwargs.pop("remat", True)
-        step_fn = make_train_step(
+        accum_steps = extra_kwargs.pop("accum_steps", 1)
+        astate = abstract_train_state(model, opt)
+        step_fn = make_step_fn(
             model, policy, opt, lambda s: 1e-3, remat=remat,
-            mesh=plan.mesh, compress_axis=compress_axis,
+            accum_steps=accum_steps, mesh=plan.mesh,
+            compress_axis=compress_axis,
             loss_kwargs={"dtype": ACT_DTYPE, "act_sharding": act_sh,
                          "loss_chunks": 16, **extra_kwargs})
-        jf = jax.jit(
-            step_fn,
-            in_shardings=(plan.shardings(p_specs), plan.shardings(o_specs),
-                          plan.shardings(b_specs), None, None),
-            out_shardings=(plan.shardings(p_specs), plan.shardings(o_specs),
-                           None),
-            donate_argnums=(0, 1))
-        key_spec = jax.eval_shape(lambda: jax.random.PRNGKey(0))
-        lowered = jf.lower(abstract_params, abstract_opt, specs_in["batch"],
-                           jax.ShapeDtypeStruct((), jnp.int32), key_spec)
+        jf = jit_step(step_fn, plan=plan, abstract_state=astate,
+                      batch_shardings=plan.shardings(b_specs))
+        lowered = jf.lower(astate, specs_in["batch"])
     elif shape.kind == "prefill":
         jf = jax.jit(
             lambda params, batch: model.prefill(params, batch, policy,
@@ -141,6 +135,8 @@ def _compile(cfg, shape, plan, policy, opt, sp: bool = True,
 
 def _metrics(compiled) -> dict:
     cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):       # older jax: one dict per device
+        cost = cost[0] if cost else {}
     coll = collective_bytes(compiled.as_text())
     return {"flops": float(cost.get("flops", 0.0)),
             "bytes": float(cost.get("bytes accessed", 0.0)),

@@ -1,66 +1,25 @@
-"""Training driver: step builder (used by dry-run, tests, examples) + CLI.
+"""Training CLI on top of the engine (:mod:`repro.engine`).
 
-``make_train_step`` returns the pure jit-able function
-``(params, opt_state, batch, step, key) -> (params, opt_state, metrics)``
-with FQT quantization, optional remat, global-norm clipping, schedule, and
-(optionally) the beyond-paper compressed cross-pod gradient all-reduce.
+The step/loop construction lives in ``repro.engine`` — this module only
+parses arguments, resolves the policy, and drives ``Engine.run()``.
 
-The CLI trains a reduced config on CPU end-to-end with checkpointing,
-preemption handling, and prefetch — the same loop a production job runs.
+``train_loop`` is kept as a thin compatibility wrapper (same signature the
+examples/tests/benches always used, plus ``mesh=``/``accum_steps=``/
+``donate=``); ``make_train_step`` is gone — use
+:func:`repro.engine.make_step_fn`, which takes/returns a
+:class:`~repro.engine.TrainState`.
 """
 
 from __future__ import annotations
 
 import argparse
-import time
 
-import jax
-import jax.numpy as jnp
-
-from ..checkpoint import CheckpointManager
 from ..configs import get_config
 from ..core import QuantPolicy
-from ..core.compression import compressed_grad_allreduce
-from ..data import Prefetcher, ShardedLoader, make_batch_for
-from ..models import build_model
-from ..optim import adamw, clip_by_global_norm, cosine_schedule, sgd
+from ..engine import Engine
 from ..runtime import PreemptionHandler
 
-__all__ = ["make_train_step", "train_loop", "main"]
-
-
-def make_train_step(model, policy: QuantPolicy, opt, lr_fn,
-                    clip_norm: float = 1.0, remat: bool = True,
-                    mesh=None, compress_axis: str | None = None,
-                    loss_kwargs: dict | None = None):
-    """Build the pure training step.
-
-    compress_axis: mesh axis over which gradients are exchanged with the
-    unbiased int8 compressed all-reduce instead of GSPMD's implicit fp32
-    psum (beyond-paper, DESIGN.md Sec. 4).  Requires `mesh`.
-    """
-
-    def train_step(params, opt_state, batch, step, key):
-        kstep = jax.random.fold_in(key, step)
-
-        def loss_fn(p):
-            loss, mets = model.loss(p, batch, kstep, policy, remat=remat,
-                                    **(loss_kwargs or {}))
-            return loss, mets
-
-        (loss, mets), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
-        if compress_axis is not None:
-            grads = compressed_grad_allreduce(
-                grads, mesh, compress_axis,
-                jax.random.fold_in(kstep, 0xC0),
-                bits=policy.dp_grad_bits, mean=True)
-        grads, gnorm = clip_by_global_norm(grads, clip_norm)
-        lr = lr_fn(step)
-        params, opt_state = opt.apply(params, grads, opt_state, lr)
-        metrics = {"loss": loss, "grad_norm": gnorm, "lr": lr, **mets}
-        return params, opt_state, metrics
-
-    return train_step
+__all__ = ["train_loop", "main"]
 
 
 def train_loop(cfg, policy: QuantPolicy, *, steps: int, batch_size: int,
@@ -68,54 +27,22 @@ def train_loop(cfg, policy: QuantPolicy, *, steps: int, batch_size: int,
                ckpt_dir: str | None = None, ckpt_every: int = 100,
                log_every: int = 10, seed: int = 0, remat: bool = False,
                resume: bool = True, preemption: PreemptionHandler | None = None,
-               log_fn=print):
-    """Single-host training loop used by examples/tests."""
-    model = build_model(cfg)
-    opt = adamw() if opt_name == "adamw" else sgd(momentum=0.9)
-    lr_fn = cosine_schedule(lr, steps, warmup_steps=max(steps // 20, 1))
-    step_fn = jax.jit(make_train_step(model, policy, opt, lr_fn, remat=remat))
+               log_fn=print, **engine_kwargs):
+    """Compatibility wrapper over ``Engine(...).run()``.
 
-    key = jax.random.PRNGKey(seed)
-    params = model.init(key)
-    opt_state = opt.init(params)
-    start = 0
-
-    ckpt = CheckpointManager(ckpt_dir) if ckpt_dir else None
-    if ckpt and resume and ckpt.latest_step() is not None:
-        start = ckpt.latest_step()
-        state = ckpt.restore(start, {"params": params, "opt": opt_state})
-        params, opt_state = state["params"], state["opt"]
-        log_fn(f"[train] resumed from step {start}")
-
-    loader = ShardedLoader(
-        lambda s: make_batch_for(cfg, batch_size, seq_len, step=s, seed=seed))
-    pf = Prefetcher(loader, depth=2, start_step=start)
-    history = []
-    t0 = time.time()
-    try:
-        for step in range(start, steps):
-            batch = pf.next()
-            params, opt_state, mets = step_fn(params, opt_state, batch,
-                                              jnp.asarray(step), key)
-            if step % log_every == 0 or step == steps - 1:
-                loss = float(mets["loss"])
-                history.append((step, loss))
-                log_fn(f"[train] step {step:5d} loss {loss:8.4f} "
-                       f"gnorm {float(mets['grad_norm']):8.3f} "
-                       f"({time.time()-t0:.1f}s)")
-            if ckpt and (step + 1) % ckpt_every == 0:
-                ckpt.save(step + 1, {"params": params, "opt": opt_state},
-                          asynchronous=True)
-            if preemption and preemption.should_stop:
-                if ckpt:
-                    ckpt.save(step + 1, {"params": params, "opt": opt_state})
-                log_fn(f"[train] preempted at step {step+1}; checkpointed")
-                break
-    finally:
-        pf.stop()
-        if ckpt:
-            ckpt.wait()
-    return params, opt_state, history
+    Returns ``(params, opt_state, history)`` like the pre-engine loop,
+    except history now has one ``(step, loss)`` entry per *executed* step
+    (the old loop sampled it at ``log_every``; logging is still sampled).
+    Extra kwargs (``mesh=``, ``accum_steps=``, ``donate=``, ...) pass
+    through to :class:`~repro.engine.Engine`.
+    """
+    eng = Engine(cfg, policy, steps=steps, batch_size=batch_size,
+                 seq_len=seq_len, lr=lr, opt_name=opt_name,
+                 ckpt_dir=ckpt_dir, ckpt_every=ckpt_every,
+                 log_every=log_every, seed=seed, remat=remat, resume=resume,
+                 preemption=preemption, log_fn=log_fn, **engine_kwargs)
+    history = eng.run()
+    return eng.state.params, eng.state.opt_state, history
 
 
 def parse_override(text: str):
@@ -153,13 +80,26 @@ def parse_override(text: str):
     return pattern, value
 
 
+def parse_mesh(text: str):
+    """``--mesh DATAxMODEL`` (e.g. ``2x2``) -> (data, model)."""
+    try:
+        data, model = (int(v) for v in text.lower().split("x"))
+        if data < 1 or model < 1:
+            raise ValueError
+    except ValueError:
+        raise argparse.ArgumentTypeError(
+            f"{text!r}: expected DATAxMODEL, e.g. 2x2") from None
+    return data, model
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(description="FQT training driver")
     ap.add_argument("--arch", default="statquant-tx")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--batch", type=int, default=8,
+                    help="GLOBAL batch per optimizer step")
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--opt", default="adamw", choices=["adamw", "sgd"])
@@ -170,6 +110,15 @@ def main(argv=None):
                     choices=["simulate", "native", "pallas"],
                     help="quantized-GEMM execution backend (core/backend.py);"
                          " pallas = fused kernels for fwd AND both bwd GEMMs")
+    ap.add_argument("--mesh", type=parse_mesh, default=None,
+                    metavar="DATAxMODEL",
+                    help="train sharded on a (data, model) mesh; needs that "
+                         "many devices (CPU: XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--accum", type=int, default=1,
+                    help="gradient-accumulation microbatches per step")
+    ap.add_argument("--no-donate", dest="donate", action="store_false",
+                    help="disable TrainState buffer donation (debugging)")
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--override", action="append", default=[],
                     metavar="PATTERN=SPEC", type=parse_override,
@@ -198,10 +147,24 @@ def main(argv=None):
         print("[train] resolved per-layer quantizer specs:")
         for path, desc in policy.spec_table(model_quant_paths(cfg)):
             print(f"  {path:32s} {desc}")
+
+    mesh = None
+    if args.mesh is not None:
+        import jax
+        from .mesh import make_test_mesh
+        data, model = args.mesh
+        if data * model > jax.device_count():
+            ap.error(f"--mesh {data}x{model} needs {data*model} devices, "
+                     f"have {jax.device_count()} (set XLA_FLAGS="
+                     f"--xla_force_host_platform_device_count={data*model})")
+        mesh = make_test_mesh(data, model)
+
     prm = PreemptionHandler(install=True)
-    train_loop(cfg, policy, steps=args.steps, batch_size=args.batch,
-               seq_len=args.seq, lr=args.lr, opt_name=args.opt,
-               ckpt_dir=args.ckpt_dir, preemption=prm)
+    eng = Engine(cfg, policy, steps=args.steps, batch_size=args.batch,
+                 seq_len=args.seq, lr=args.lr, opt_name=args.opt,
+                 accum_steps=args.accum, mesh=mesh, donate=args.donate,
+                 ckpt_dir=args.ckpt_dir, preemption=prm)
+    eng.run()
 
 
 if __name__ == "__main__":

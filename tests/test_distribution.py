@@ -28,14 +28,14 @@ def test_sharded_train_step_compiles_and_runs():
     (FQT + SP + sdpa hint) compiles AND executes with finite loss."""
     out = run_sub("""
 import jax, jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.configs import get_config
 from repro.core import QuantPolicy
+from repro.engine import (abstract_train_state, init_train_state,
+                          jit_step, make_step_fn)
 from repro.models import build_model
 from repro.optim import sgd
 from repro.sharding import make_plan
 from repro.launch.mesh import make_test_mesh
-from repro.launch.train import make_train_step
 from repro.data import make_batch_for
 
 mesh = make_test_mesh(2, 4)
@@ -44,16 +44,17 @@ cfg = get_config("granite-3-2b", smoke=True)
 model = build_model(cfg)
 pol = QuantPolicy.fqt("bhq", 5, bhq_block=16)
 opt = sgd(0.9)
-params = model.init(jax.random.PRNGKey(0))
-opt_state = opt.init(params)
+state = init_train_state(model, opt, seed=0)
 batch = make_batch_for(cfg, 4, 16)
-pspecs = plan.param_specs(jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0))))
-step = make_train_step(model, pol, opt, lambda s: 1e-3, remat=True,
-                       loss_kwargs={"sdpa_hint": plan.attn_shardings})
+astate = abstract_train_state(model, opt)
+step = make_step_fn(model, pol, opt, lambda s: 1e-3, remat=True,
+                    loss_kwargs={"sdpa_hint": plan.attn_shardings})
 with mesh:
-    jf = jax.jit(step, in_shardings=(plan.shardings(pspecs), None, None, None, None))
-    p2, o2, mets = jf(params, opt_state, batch, jnp.asarray(0), jax.random.PRNGKey(1))
+    jf = jit_step(step, plan=plan, abstract_state=astate)
+    state2, mets = jf(state, batch)
 assert bool(jnp.isfinite(mets["loss"])), mets
+assert int(state2.step) == 1
+assert jax.tree.leaves(state2.params)[0].sharding.mesh == mesh
 print("LOSS", float(mets["loss"]))
 """)
     assert "LOSS" in out
