@@ -1,0 +1,162 @@
+"""Serving-engine benchmark: throughput, per-token latency, and the
+resident-slot arithmetic of the int8 KV cache.
+
+Three measurements, dumped to ``BENCH_serve.json``:
+
+  * ``variants`` — for fp32-cache vs int8-cache at several slot counts:
+    sustained tok/s and p50/p95 per-token (step) latency through the full
+    continuous-batching engine on a mixed-length workload (compile steps
+    excluded via a warmup drain).
+  * ``memory`` — per-slot KV-cache bytes for each variant and the resident
+    slot counts a fixed HBM budget buys: the int8 cache stores 1 byte/entry
+    plus one (scale, zero) pair per row vs 4 bytes/entry fp32, so at equal
+    memory it holds ~4x the slots (>= 2x is the acceptance bar).
+  * ``parity`` — stepwise decode vs prefill logits on all three execution
+    backends: exact (fp) decode must match prefill to float tolerance, and
+    the int8-KV drift must stay within a small multiple of the fp-path
+    quantized-forward drift.
+
+Wall-clock numbers are XLA-path only (interpret-mode Pallas timing on CPU is
+meaningless — see BENCH_kernels.json conventions); the pallas parity row
+runs the fused dequant kernel in interpret mode for *numerics*, not speed.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import QuantPolicy, kv_cache_bytes_per_row
+from repro.models import build_model
+from repro.serve import ServeEngine
+
+BENCH_JSON = os.environ.get("BENCH_SERVE_JSON", "BENCH_serve.json")
+SLOT_COUNTS = (2, 4, 8)
+MAX_SEQ = 48
+MAX_NEW = 16
+REQUESTS_PER_SLOT = 3
+HBM_BUDGET = 64 << 30          # 64 GiB: the resident-slot arithmetic budget
+
+
+def _submit_workload(eng, cfg, n_requests: int, seed: int = 0):
+    rng = np.random.RandomState(seed)
+    for _ in range(n_requests):
+        plen = int(rng.randint(4, 17))
+        eng.submit(rng.randint(0, cfg.vocab_size, size=plen),
+                   max_new=MAX_NEW)
+
+
+def _run_variant(cfg, params, kv_quant: bool, slots: int) -> dict:
+    eng = ServeEngine(cfg, params, policy=QuantPolicy.qat(), slots=slots,
+                      max_seq=MAX_SEQ, kv_quant=kv_quant, seed=0)
+    # warmup drain: compiles the decode step + the prefill/insert buckets
+    _submit_workload(eng, cfg, slots, seed=1)
+    eng.run()
+    eng.step_times.clear()
+    _submit_workload(eng, cfg, REQUESTS_PER_SLOT * slots, seed=0)
+    out = eng.run()
+    n_tok = sum(len(c.tokens) for c in out.values())
+    dts = np.asarray([dt for dt, n in eng.step_times if n > 0])
+    emitted = sum(n for _, n in eng.step_times)
+    total = float(np.sum(dts)) if dts.size else 0.0
+    return {
+        "slots": slots,
+        "kv": "int8" if kv_quant else "fp32",
+        "requests": len(out),
+        "tokens": n_tok,
+        "tok_per_sec": emitted / total if total else 0.0,
+        "p50_ms": float(np.percentile(dts, 50)) * 1e3 if dts.size else 0.0,
+        "p95_ms": float(np.percentile(dts, 95)) * 1e3 if dts.size else 0.0,
+    }
+
+
+def _memory_record(cfg) -> dict:
+    flat = cfg.n_kv_heads * cfg.hd
+    rows_per_slot = 2 * cfg.n_layers * MAX_SEQ          # k and v, every layer
+    per_slot = {
+        "fp32": rows_per_slot * kv_cache_bytes_per_row(flat, False),
+        "int8": rows_per_slot * kv_cache_bytes_per_row(flat, True),
+    }
+    resident = {k: HBM_BUDGET // v for k, v in per_slot.items()}
+    return {
+        "kv_rows_per_slot": rows_per_slot,
+        "bytes_per_slot": per_slot,
+        "hbm_budget_bytes": HBM_BUDGET,
+        "resident_slots_at_budget": resident,
+        "slot_ratio_int8_over_fp32": resident["int8"] / resident["fp32"],
+    }
+
+
+def _parity_record(cfg, params) -> dict:
+    """Stepwise decode vs prefill logits, per backend, fp and int8-KV."""
+    model = build_model(cfg)
+    B, T = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, T), 0,
+                              cfg.vocab_size)
+    out = {}
+    for backend in ("simulate", "native", "pallas"):
+        pol = QuantPolicy.qat(backend=backend)
+        exact = QuantPolicy(enabled=False, backend=backend)
+        row = {}
+        for name, policy in (("exact", exact), ("qat", pol)):
+            lg_pre, _ = model.prefill(params, {"tokens": toks}, policy,
+                                      max_seq=T + 2)
+            scale = float(jnp.max(jnp.abs(lg_pre))) + 1e-9
+            for kv, init in (("fp32", model.init_cache),
+                             ("int8", model.init_cache_quant)):
+                if kv == "int8":
+                    cache = init(cfg, B, T + 2)
+                else:
+                    cache = init(cfg, B, T + 2)
+                    cache["index"] = jnp.zeros((B,), jnp.int32)
+                pos = jnp.zeros((B,), jnp.int32)
+                lg = None
+                for t in range(T):
+                    lg, cache = model.decode(
+                        params, cache, {"tokens": toks[:, t:t + 1]}, policy,
+                        positions=pos)
+                    pos = pos + 1
+                # exact policy never touches the int8 cache quantizers'
+                # forward GEMMs, but the cache codec still rounds — only
+                # the fp cache must match to float tolerance
+                row[f"{name}_{kv}_max_abs"] = float(
+                    jnp.max(jnp.abs(lg - lg_pre)))
+                row[f"{name}_{kv}_rel"] = float(
+                    jnp.max(jnp.abs(lg - lg_pre))) / scale
+        row["pass"] = (row["exact_fp32_max_abs"] < 1e-4
+                       and row["qat_fp32_rel"] < 0.05
+                       and row["qat_int8_rel"] < 0.10)
+        out[backend] = row
+    return out
+
+
+def run():
+    cfg = get_config("statquant-tx", smoke=True)
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+
+    record = {"arch": cfg.name, "max_seq": MAX_SEQ, "max_new": MAX_NEW,
+              "variants": [], "memory": _memory_record(cfg),
+              "parity": _parity_record(cfg, params)}
+    rows = []
+    for slots in SLOT_COUNTS:
+        for kv_quant in (False, True):
+            v = _run_variant(cfg, params, kv_quant, slots)
+            record["variants"].append(v)
+            rows.append((f"serve/{v['kv']}_slots={slots}",
+                         v["p50_ms"] * 1e3, v["tok_per_sec"]))
+
+    ratio = record["memory"]["slot_ratio_int8_over_fp32"]
+    record["acceptance"] = {
+        "slot_ratio_ge_2x": ratio >= 2.0,
+        "parity_all_backends": all(v["pass"]
+                                   for v in record["parity"].values()),
+    }
+    with open(BENCH_JSON, "w") as f:
+        json.dump(record, f, indent=1)
+    return rows

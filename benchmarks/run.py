@@ -8,6 +8,7 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
   overhead_* quantization overhead vs GEMM             (paper Sec. 4.3)
   kernel_*   kernel timings + TPU-target properties
   train_*    engine step throughput (donation x accumulation)
+  serve_*    continuous-batching serving (fp32 vs int8 KV cache)
 
 Select suites with ``python -m benchmarks.run fig3 table1 ...`` (default all).
 """
@@ -20,7 +21,8 @@ import traceback
 
 def main() -> None:
     from . import (bench_bins, bench_convergence, bench_kernels,
-                   bench_overhead, bench_train_step, bench_variance)
+                   bench_overhead, bench_serve, bench_train_step,
+                   bench_variance)
 
     suites = {
         "fig3": bench_variance.run,
@@ -29,6 +31,7 @@ def main() -> None:
         "overhead": bench_overhead.run,
         "kernel": bench_kernels.run,
         "train": bench_train_step.run,
+        "serve": bench_serve.run,
     }
     selected = sys.argv[1:] or list(suites)
     print("name,us_per_call,derived")

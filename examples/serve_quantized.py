@@ -1,20 +1,19 @@
-"""Serving example: train with FQT, then serve with inference quantization.
+"""Serving example: train with FQT, then serve with continuous batching.
 
     PYTHONPATH=src python examples/serve_quantized.py
 
-Covers the full lifecycle: FQT training -> checkpoint -> restore -> batched
-prefill+decode serving with deterministic 8-bit forward quantizers.
+Covers the full lifecycle: FQT training -> TrainState checkpoint ->
+ServeEngine.from_checkpoint (no conversion) -> mixed-length requests
+streaming through a fixed pool of decode slots with an int8-quantized KV
+cache and per-request sampling.
 """
 
-import jax.numpy as jnp
+import numpy as np
 
-from repro.checkpoint import CheckpointManager
 from repro.configs import get_config
 from repro.core import QuantPolicy
-from repro.data import make_batch_for
-from repro.launch.serve import generate
 from repro.launch.train import train_loop
-from repro.models import build_model
+from repro.serve import ServeEngine
 
 
 def main():
@@ -22,27 +21,29 @@ def main():
     ckpt_dir = "/tmp/fqt_serve_demo"
 
     print("1) training with 6-bit PSQ FQT ...")
-    params, _, _ = train_loop(cfg, QuantPolicy.fqt("psq", 6),
-                              steps=60, batch_size=8, seq_len=32, lr=4e-3,
-                              ckpt_dir=ckpt_dir, ckpt_every=30,
-                              log_every=20, resume=False)
+    train_loop(cfg, QuantPolicy.fqt("psq", 6),
+               steps=60, batch_size=8, seq_len=32, lr=4e-3,
+               ckpt_dir=ckpt_dir, ckpt_every=30,
+               log_every=20, resume=False)
 
-    print("2) restoring latest checkpoint ...")
-    ckpt = CheckpointManager(ckpt_dir)
-    step = ckpt.latest_step()
-    model = build_model(cfg)
-    restored = ckpt.restore(step, {"params": params,
-                                   "opt": {"m": params, "v": params,
-                                           "t": jnp.zeros((), jnp.int32)}})
-    params = restored["params"]
+    print("2) serving from the checkpoint (4 slots, int8 KV cache) ...")
+    eng = ServeEngine.from_checkpoint(
+        cfg, ckpt_dir, policy=QuantPolicy.qat(),   # 8-bit inference quant
+        slots=4, max_seq=48, kv_quant=True, seed=0)
 
-    print("3) serving with 8-bit inference quantization ...")
-    batch = make_batch_for(cfg, 4, 16)
-    batch.pop("labels")
-    toks = generate(model, params, batch, QuantPolicy.qat(),
-                    max_new=12, max_seq=32)
-    for i, row in enumerate(toks.tolist()):
-        print(f"   request {i}: {row}")
+    rng = np.random.RandomState(0)
+    for i in range(6):
+        plen = int(rng.randint(4, 16))
+        eng.submit(rng.randint(0, cfg.vocab_size, size=plen),
+                   max_new=12,
+                   temperature=0.0 if i % 2 else 0.7,
+                   top_k=0 if i % 2 else 20)
+
+    completions = eng.run()
+    for rid in sorted(completions):
+        c = completions[rid]
+        print(f"   request {rid} ({c.reason}, prompt {c.prompt_len}): "
+              f"{c.tokens}")
 
 
 if __name__ == "__main__":

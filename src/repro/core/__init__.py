@@ -4,31 +4,38 @@ from .backend import (BACKENDS, affine_factors, apply_epilogue,
                       epilogue_coeffs, q8_gemm, qt_gemm, qt_gemm_nt,
                       qt_gemm_tn, quantize_sr_rows_qt, quantize_sr_tensor_qt,
                       resolve_interpret)
-from .bhq import BHQTensor, bhq_variance_bound, quantize_bhq_stoch
+from .bhq import (BHQTensor, bhq_exact_variance, bhq_variance_bound,
+                  quantize_bhq_stoch)
 from .compression import (compressed_grad_allreduce, compressed_psum,
                           compression_variance_bound)
 from .fqt import fqt_matmul
+from .kv_cache import (dequant_kv_rows, kv_cache_bytes_per_row,
+                       quantize_kv_rows)
 from .policy import EXACT, FQT8_BHQ, QAT, QuantPolicy, RoleOverride
 from .quantizers import (QTensor, dynamic_range, num_bins,
                          psq_variance_bound, ptq_variance_bound,
                          quantize_psq_stoch, quantize_ptq_det,
                          quantize_ptq_stoch, row_dynamic_range, sr_uniform,
                          sr_variance_exact, stochastic_round)
-from .registry import (ROLES, GemmQuantConfig, Quantizer, QuantizerSpec,
-                       available_quantizers, get_quantizer,
-                       register_quantizer)
+from .registry import (KV_CACHE_ROLE, ROLES, GemmQuantConfig, Quantizer,
+                       QuantizerSpec, available_quantizers, get_quantizer,
+                       register_quantizer, resolve_kv_cache_spec)
 
 __all__ = [
     "BHQTensor", "QTensor", "QuantPolicy", "RoleOverride", "EXACT", "QAT",
     "FQT8_BHQ",
     # role-based quantizer API (core/registry.py)
-    "ROLES", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
+    "ROLES", "KV_CACHE_ROLE", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
     "register_quantizer", "get_quantizer", "available_quantizers",
+    "resolve_kv_cache_spec",
     "fqt_matmul", "num_bins", "dynamic_range", "row_dynamic_range",
     "sr_uniform", "stochastic_round", "quantize_ptq_det",
     "quantize_ptq_stoch", "quantize_psq_stoch", "quantize_bhq_stoch",
     "ptq_variance_bound", "psq_variance_bound", "bhq_variance_bound",
-    "sr_variance_exact", "compressed_psum", "compressed_grad_allreduce",
+    "sr_variance_exact", "bhq_exact_variance",
+    # int8 KV-cache codec (core/kv_cache.py, serving decode path)
+    "quantize_kv_rows", "dequant_kv_rows", "kv_cache_bytes_per_row",
+    "compressed_psum", "compressed_grad_allreduce",
     "compression_variance_bound",
     # backend seam (core/backend.py — the single source of epilogue algebra)
     "BACKENDS", "resolve_interpret", "affine_factors", "epilogue_coeffs",

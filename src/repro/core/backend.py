@@ -197,7 +197,9 @@ def qt_gemm_nt(aq: Union[QTensor, BHQTensor], bq: QTensor, *, backend: str,
         t = q8_gemm(a8, 1.0, beta_a, bt8, alpha_b, beta_b,
                     backend=backend, interpret=interpret)
         t = t.reshape(nb, blk, -1)
-        return aq.dequant_epilogue(t).reshape(nb * blk, -1)
+        # ragged inputs carry zero-padding rows in the last block — slice
+        # back to the real row count after the S^{-1} epilogue
+        return aq.dequant_epilogue(t).reshape(nb * blk, -1)[:aq.n_rows]
     alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
     return q8_gemm(_codes2d(aq), alpha_a, beta_a, bt8, alpha_b, beta_b,
                    backend=backend, interpret=interpret)

@@ -20,12 +20,17 @@ segment-sum Householder and divides by the row scales: unbiasedness
 
 For large N (LM token rows) the grouping runs independently over row blocks of
 ``block_rows`` via ``vmap`` — bounding the sort cost and keeping the paper's
-N≈128-row regime per group search.
+N≈128-row regime per group search.  Ragged row counts (``n % block_rows != 0``)
+are padded up to the next block multiple with all-zero rows: zero rows sort
+last, carry zero grouping weight, and the per-block transform stays linear and
+invertible, so unbiasedness of the *real* rows is exact; dequantization slices
+the padding back off.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import math
 from functools import partial
 
 import jax
@@ -33,7 +38,8 @@ import jax.numpy as jnp
 
 from .quantizers import num_bins, stochastic_round, row_dynamic_range
 
-__all__ = ["BHQTensor", "quantize_bhq_stoch", "bhq_variance_bound"]
+__all__ = ["BHQTensor", "quantize_bhq_stoch", "bhq_variance_bound",
+           "bhq_exact_variance"]
 
 _EPS = 1e-12
 
@@ -58,12 +64,17 @@ class BHQTensor:
     bits: int = dataclasses.field(metadata=dict(static=True))
     shape: tuple = dataclasses.field(metadata=dict(static=True))
 
+    @property
+    def n_rows(self) -> int:
+        """Real (unpadded) row count — blocks may carry zero-padding rows."""
+        return math.prod(self.shape[:-1]) if len(self.shape) > 1 else 1
+
     def dequant(self) -> jax.Array:
         t = self.codes.astype(jnp.float32) + self.zero
         y = _apply_householder(t, self.seg, self.n_vec, self.coef)
         y = y / self.row_scale
         out = _unpermute(y, self.inv_perm)
-        return out.reshape(self.shape)
+        return out.reshape(-1, self.shape[-1])[:self.n_rows].reshape(self.shape)
 
     @property
     def int8_codes(self) -> jax.Array:
@@ -142,65 +153,98 @@ def _g_candidates(n: int):
     return cands
 
 
-def _select_g(mag_s: jax.Array, rng_s: jax.Array, n: int, g_search: str):
+def _select_g(mag_s: jax.Array, rng_s: jax.Array, n: int, g_search: str,
+              n_valid=None):
     """Pick the number of groups G.
 
-    ``paper``   — the paper's Appendix-D.5 proxy (sum_{i<=G} M_i)^2/(N-G),
-                  which idealizes lambda2 ~ 0 and can badly mis-group when
-                  several comparable outliers exist.
+    ``n_valid``: traced count of real rows (<= the static block size n) —
+    ragged blocks carry inert zero-padding rows that must not count as
+    small-row budget in either proxy; candidates G > n_valid are masked out.
+
+    ``paper``   — the paper's Appendix-D.5 proxy (sum_{i<=G} M_i)^2/(N-G)
+                  for G < N, which idealizes lambda2 ~ 0 and can badly
+                  mis-group when several comparable outliers exist.  The
+                  PSQ-degenerate candidate G = N (no small rows — the proxy's
+                  denominator vanishes) is scored with its *exact* variance
+                  sum, sum_i R(x_i)^2 (singleton groups, Q = I: each row's
+                  conditional SR variance is D/(4B^2) * R_i^2 and the shared
+                  D/(4B^2) factor drops out of the argmin).
     ``refined`` — (default) score each candidate G with the *full* D.4 bound
                   per group, sum_i (l1_i^{2/3} m_i^{-1/3} + l2^{2/3} m_i^{2/3})^3
                   with l1_i = R(row_i), l2 = 2 M_{G+1}, m_i the heuristic
                   proportional group size.  O(N) per candidate, log2(N)
                   candidates.  DESIGN.md Sec. 6 records this adaptation.
     """
+    nv = jnp.asarray(n if n_valid is None else n_valid, jnp.float32)
     if g_search == "paper":
         csum = jnp.cumsum(mag_s)
         gs_idx = jnp.arange(1, n, dtype=jnp.float32)
-        score = (csum[:-1] ** 2) / (n - gs_idx)
-        return jnp.argmin(score).astype(jnp.int32) + 1
+        score = (csum[:-1] ** 2) / jnp.maximum(nv - gs_idx, 1.0)
+        score = jnp.where(gs_idx < nv, score, jnp.inf)   # G in [1, nv-1]
+        score_n = jnp.sum(rng_s ** 2)[None]              # G = nv: exact (PSQ)
+        score = jnp.concatenate([score, score_n])
+        best = jnp.argmin(score).astype(jnp.int32)
+        return jnp.where(best == n - 1, nv.astype(jnp.int32), best + 1)
     idx = jnp.arange(n, dtype=jnp.float32)
     scores = []
     cands = _g_candidates(n)
     for G in cands:
         mask = idx < G
         msum = jnp.maximum(jnp.sum(jnp.where(mask, mag_s, 0.0)), _EPS)
-        m_i = 1.0 + (n - G) * mag_s / msum                    # heuristic sizes
+        m_i = 1.0 + jnp.maximum(nv - G, 0.0) * mag_s / msum   # heuristic sizes
         lam1 = jnp.maximum(rng_s, _EPS)
         lam2 = 2.0 * (mag_s[G] if G < n else 0.0) + _EPS
         term = (lam1 ** (2 / 3) * m_i ** (-1 / 3)
                 + lam2 ** (2 / 3) * m_i ** (2 / 3)) ** 3
-        scores.append(jnp.sum(jnp.where(mask, term, 0.0)))
+        score = jnp.sum(jnp.where(mask, term, 0.0))
+        scores.append(jnp.where(G <= nv, score, jnp.inf))
     best = jnp.argmin(jnp.stack(scores))
     return jnp.asarray(cands, dtype=jnp.int32)[best]
 
 
-def _bhq_block(g: jax.Array, key: jax.Array, bits: int, g_search: str):
-    """BHQ over one (n, D) block. Returns fields for BHQTensor (block-local)."""
+def _bhq_transform(g: jax.Array, valid: jax.Array, bits: int, g_search: str):
+    """The deterministic part of BHQ over one (n, D) block: sort, group,
+    scale, Householder.  Returns ``(y, zero, row_scale, n_vec, coef, seg,
+    perm)`` where ``y - zero`` is the tensor the stochastic round consumes —
+    shared by :func:`_bhq_block` (quantize) and :func:`bhq_exact_variance`
+    (exact conditional variance needs the pre-round values).
+
+    ``valid``: (n,) mask of real rows.  Zero-padding rows (ragged inputs)
+    sort last and sit in *singleton* groups of their own (Q = I, zero
+    scaled value): mixing them into real groups would let a group's small
+    rows be all-zero, collapsing its lambda2 and over-scaling the large row
+    into deterministic clipping — a bias, not just variance.
+    """
     B = float(num_bins(bits))
     n, d = g.shape
 
     # --- step 1: sort rows by infinity-norm magnitude, descending ----------
     mag = jnp.max(jnp.abs(g), axis=-1)                       # M_i
+    mag = jnp.where(valid, mag, -1.0)                        # pads strictly last
     perm = jnp.argsort(-mag)                                 # sorted -> original
     gs = g[perm]
-    mag_s = mag[perm]
+    mag_s = jnp.maximum(mag[perm], 0.0)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
 
     # --- step 2: choose the number of groups G ------------------------------
     rng_s = row_dynamic_range(gs)
-    G = _select_g(mag_s, rng_s, n, g_search)                 # traced scalar
+    G = _select_g(mag_s, rng_s, n, g_search, n_valid)        # traced scalar
+    G = jnp.minimum(G, n_valid)          # group only among the real rows
 
     idx = jnp.arange(n, dtype=jnp.int32)
     is_large = idx < G
+    is_pad = idx >= n_valid
 
     # --- step 3: group sizes ∝ magnitude, largest-remainder -----------------
     w = jnp.where(is_large, mag_s, 0.0)
-    extras = _largest_remainder(w, (n - G).astype(jnp.float32), is_large)
+    n_small = jnp.maximum(n_valid - G, 0).astype(jnp.float32)
+    extras = _largest_remainder(w, n_small, is_large)
     # small row p (p = j - G in sorted order) joins group searchsorted(cum, p)
     cum = jnp.cumsum(extras)                                  # (n,)
     p = jnp.clip(idx - G, 0, n - 1)
     small_seg = jnp.searchsorted(cum, p, side="right").astype(jnp.int32)
     seg = jnp.where(is_large, idx, jnp.clip(small_seg, 0, n - 1))
+    seg = jnp.where(is_pad, idx, seg)                         # pads: singletons
 
     m = (extras + 1).astype(jnp.float32)                      # group sizes (valid < G)
     m = jnp.maximum(m, 1.0)
@@ -226,32 +270,61 @@ def _bhq_block(g: jax.Array, key: jax.Array, bits: int, g_search: str):
     coef_g = jnp.where(m_g > 1.5, jnp.sqrt(m_g) / jnp.maximum(jnp.sqrt(m_g) - 1.0, _EPS), 0.0)
     coef = coef_g[seg][:, None]
 
-    # --- step 5: transform, per-group zero, stochastic round ----------------
+    # --- step 5: transform + per-group zero ---------------------------------
     xs = row_scale * gs
     y = _apply_householder(xs[None], seg[None], n_vec[None], coef[None])[0]
     row_min = jnp.min(y, axis=-1)
     zero_g = jax.ops.segment_min(row_min, seg, num_segments=n)
     zero = zero_g[seg][:, None]
+    return y, zero, row_scale, n_vec, coef, seg, perm
+
+
+def _bhq_block(g: jax.Array, key: jax.Array, valid: jax.Array, bits: int,
+               g_search: str):
+    """BHQ over one (n, D) block. Returns fields for BHQTensor (block-local)."""
+    B = float(num_bins(bits))
+    y, zero, row_scale, n_vec, coef, seg, perm = _bhq_transform(
+        g, valid, bits, g_search)
     codes = stochastic_round(y - zero, key)
     codes = jnp.clip(codes, 0.0, B).astype(jnp.uint8)
-
     inv_perm = perm  # y rows are in sorted order; scatter back via perm
     return codes, zero, row_scale, n_vec, coef, seg, inv_perm
+
+
+def _blocked_rows(x: jax.Array, block_rows: int):
+    """Flatten to rows and zero-pad up to a ``block_rows`` multiple.
+
+    Returns ``(blocks (nb, blk, D), valid (nb, blk), n_real)``.  A single
+    short input (n <= block_rows) stays one unpadded block; larger ragged
+    inputs pad so the per-block group search keeps the paper's
+    ~block_rows-row regime instead of silently collapsing to one all-n
+    block (unbounded sort cost).
+    """
+    rows = x.reshape(-1, x.shape[-1])
+    n = rows.shape[0]
+    blk = block_rows if n > block_rows else n
+    n_pad = -(-n // blk) * blk
+    if n_pad != n:
+        rows = jnp.pad(rows, ((0, n_pad - n), (0, 0)))
+    nb = n_pad // blk
+    valid = (jnp.arange(n_pad) < n).reshape(nb, blk)
+    return rows.reshape(nb, blk, x.shape[-1]), valid, n
 
 
 def quantize_bhq_stoch(x: jax.Array, key: jax.Array, bits: int = 8,
                        block_rows: int = 1024,
                        g_search: str = "refined") -> BHQTensor:
-    """BHQ over row blocks. x: (..., D) -> rows = prod(leading dims)."""
+    """BHQ over row blocks. x: (..., D) -> rows = prod(leading dims).
+
+    Ragged row counts pad with zero rows (zero grouping weight; sliced off
+    again by ``dequant``/``dequant_epilogue`` consumers) — unbiasedness of
+    the real rows is exact for any grouping, padded or not.
+    """
     shape = x.shape
-    rows = x.reshape(-1, shape[-1])
-    n = rows.shape[0]
-    blk = block_rows if (n % block_rows == 0 and n > block_rows) else n
-    nb = n // blk
-    gb = rows.reshape(nb, blk, shape[-1])
-    keys = jax.random.split(key, nb)
+    gb, valid, _ = _blocked_rows(x, block_rows)
+    keys = jax.random.split(key, gb.shape[0])
     codes, zero, rs, nv, cf, seg, ip = jax.vmap(
-        partial(_bhq_block, bits=bits, g_search=g_search))(gb, keys)
+        partial(_bhq_block, bits=bits, g_search=g_search))(gb, keys, valid)
     return BHQTensor(codes=codes, zero=zero, row_scale=rs, n_vec=nv, coef=cf,
                      seg=seg, inv_perm=ip, bits=bits, shape=shape)
 
@@ -263,3 +336,51 @@ def bhq_variance_bound(qt: BHQTensor) -> jax.Array:
     """
     d = qt.shape[-1]
     return d / 4.0 * jnp.sum(1.0 / qt.row_scale ** 2)
+
+
+def _block_exact_variance(g: jax.Array, retained: jax.Array, *, bits: int,
+                          g_search: str) -> jax.Array:
+    """Exact conditional variance contributed by one (n, D) block.
+
+    The dequantized noise is ``S^{-1} eps = diag(1/s) Q eps`` with independent
+    SR noise ``Var[eps_kd] = p(1-p)``, ``p = frac(y - zero)`` (Proposition 4).
+    Summing over the *retained* output rows j (zero-padding rows excluded):
+
+        Var = sum_k w_k * colnorm_k
+        w_k       = sum_d p(1-p)_kd
+        colnorm_k = sum_{j ret} (Q_jk / s_j)^2
+                  = ret_k (1 - 2 c n_k^2)/s_k^2 + c^2 n_k^2 sum_{j in g, ret} n_j^2/s_j^2
+
+    using ``Q_jk = delta_jk - c n_j n_k`` within a group (0 across groups).
+    """
+    n = g.shape[0]
+    y, zero, row_scale, n_vec, coef, seg, perm = _bhq_transform(
+        g, retained > 0, bits, g_search)
+    t = y - zero
+    p = t - jnp.floor(t)
+    w = jnp.sum(p * (1.0 - p), axis=-1)                       # (n,)
+    s = row_scale[:, 0]
+    nv = n_vec[:, 0]
+    c = coef[:, 0]
+    ret = retained[perm]                                      # sorted order
+    a = jax.ops.segment_sum(ret * nv ** 2 / s ** 2, seg, num_segments=n)
+    colnorm = ret * (1.0 - 2.0 * c * nv ** 2) / s ** 2 + c ** 2 * nv ** 2 * a[seg]
+    return jnp.sum(w * colnorm)
+
+
+def bhq_exact_variance(x: jax.Array, bits: int = 8, block_rows: int = 1024,
+                       g_search: str = "refined") -> jax.Array:
+    """Exact conditional ``Var[Q_b(x) | x]`` summed over entries.
+
+    The BHQ transform is deterministic given ``x``; only the stochastic
+    rounding injects noise, so the exact variance is the SR ``sum p(1-p)``
+    (Proposition 4) pushed through the ``S^{-1}`` columns — see
+    :func:`_block_exact_variance`.  Exact modulo the (rare) code clipping at
+    the bin boundaries, the same caveat as :func:`~repro.core.quantizers.
+    sr_variance_exact`.
+    """
+    gb, valid, _ = _blocked_rows(x, block_rows)
+    per_block = jax.vmap(partial(_block_exact_variance, bits=bits,
+                                 g_search=g_search))(
+        gb, valid.astype(jnp.float32))
+    return jnp.sum(per_block)

@@ -1,0 +1,87 @@
+"""int8-quantized KV-cache codec: per-row affine codes for serving decode.
+
+The paper's deployment story (Sec. 1) is that the deterministic forward
+quantizers make int8 *inference* free; the KV cache is the serving-time
+tensor that actually dominates HBM at scale, and the same per-row affine
+scheme (one ``(scale, zero)`` pair per cached row, PSQ's transform without
+the stochastic round) compresses it 4x — 4x more resident decode slots at
+equal memory (benchmarks/bench_serve.py).
+
+Quantization is **deterministic** (round-to-nearest): the cache sits on the
+forward/inference path, where the framework requires deterministic
+quantizers (Sec. 2.1) — stochastic rounding would inject fresh noise into
+every later decode step that re-reads the row.
+
+Layout convention: a cache row is the flattened ``n_kv * head_dim`` feature
+vector of one (batch, position); codes are stored shifted-signed int8
+(``c8 = code - 2^(b-1)``, the MXU/native layout) so the tensor is genuinely
+1 byte/entry, with ``scale``/``zero`` per row:
+
+    x ~= (c8 + 2^(b-1)) / scale + zero
+
+Dequantization dispatches on the execution backend like every other
+quantized op in the stack: ``simulate``/``native`` run the XLA elementwise
+expression (there is no GEMM here — "native" and "simulate" coincide);
+``pallas`` routes through the fused :func:`~repro.kernels.kv_dequant.
+kv_dequant_rows` kernel.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.kv_dequant import kv_dequant_rows
+from .quantizers import num_bins
+
+__all__ = ["quantize_kv_rows", "dequant_kv_rows", "kv_cache_bytes_per_row"]
+
+_EPS = 1e-12
+
+
+def quantize_kv_rows(x: jax.Array, bits: int = 8):
+    """Per-row deterministic affine quantize over the last axis.
+
+    x: (..., D) float.  Returns ``(codes (..., D) int8 shifted-signed,
+    scale (...,) f32, zero (...,) f32)`` with one affine pair per leading
+    index — for a KV cache that is one pair per (batch, position) row.
+    """
+    B = num_bins(bits)
+    x = x.astype(jnp.float32)
+    lo = jnp.min(x, axis=-1)
+    hi = jnp.max(x, axis=-1)
+    scale = B / jnp.maximum(hi - lo, _EPS)
+    t = scale[..., None] * (x - lo[..., None])
+    codes = jnp.clip(jnp.round(t), 0.0, B) - (1 << (bits - 1))
+    return codes.astype(jnp.int8), scale, lo
+
+
+def dequant_kv_rows(codes8: jax.Array, scale: jax.Array, zero: jax.Array,
+                    bits: int = 8, *, backend: str = "simulate",
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """Inverse of :func:`quantize_kv_rows`, dispatched per backend.
+
+    codes8: (..., D) int8; scale/zero: (...,) matching the leading axes.
+    Returns (..., D) f32.
+    """
+    if backend == "pallas":
+        from .backend import resolve_interpret   # late: avoids import cycle
+        d = codes8.shape[-1]
+        out = kv_dequant_rows(codes8.reshape(-1, d),
+                              scale.reshape(-1, 1), zero.reshape(-1, 1),
+                              bits=bits, interpret=resolve_interpret(interpret))
+        return out.reshape(codes8.shape)
+    off = 1 << (bits - 1)
+    return ((codes8.astype(jnp.float32) + off) / scale[..., None]
+            + zero[..., None])
+
+
+def kv_cache_bytes_per_row(d_flat: int, quantized: bool,
+                           dtype_bytes: int = 4) -> int:
+    """HBM bytes one cached row costs: the resident-slot arithmetic the
+    serving benchmark reports (int8 row = codes + scale + zero)."""
+    if quantized:
+        return d_flat + 2 * 4
+    return d_flat * dtype_bytes

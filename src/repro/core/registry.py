@@ -39,8 +39,9 @@ from .quantizers import (quantize_psq_stoch, quantize_ptq_det,
                          quantize_ptq_stoch)
 
 __all__ = [
-    "BACKENDS", "ROLES", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
-    "register_quantizer", "get_quantizer", "available_quantizers",
+    "BACKENDS", "ROLES", "KV_CACHE_ROLE", "QuantizerSpec", "GemmQuantConfig",
+    "Quantizer", "register_quantizer", "get_quantizer",
+    "available_quantizers", "resolve_kv_cache_spec",
 ]
 
 # The one backend registry — core/backend.py dispatches over the same tuple.
@@ -48,6 +49,13 @@ BACKENDS = ("simulate", "native", "pallas")
 
 # The paper's four tensor roles, in (forward, forward, Q_b1, Q_b2) order.
 ROLES = ("fwd_act", "fwd_weight", "wgrad", "agrad")
+
+# The serving-time cache role: KV rows quantized on write, dequantized on
+# every decode read (core/kv_cache.py).  Deliberately NOT part of ``ROLES``
+# — it never enters a GemmQuantConfig; the serving engine resolves it via
+# :func:`resolve_kv_cache_spec` and the attention decode path consumes the
+# registered quantizer's ``quantize_rows``/``dequant_rows`` protocol.
+KV_CACHE_ROLE = "kv_cache"
 
 # Spec name that pins a role (or a whole layer) to full precision.
 EXACT_NAME = "exact"
@@ -317,7 +325,64 @@ class BlockHouseholder(Quantizer):
             g_search=spec.param("g_search", "refined"))
 
 
+class KVCacheInt8(Quantizer):
+    """The ``kv_cache`` role: deterministic per-row affine int8 cache codec.
+
+    Beyond the standard :meth:`quantize` protocol (returns a per-row
+    ``QTensor``), cache quantizers expose the row-codec pair the decode
+    attention path consumes — third-party cache codecs register an object
+    with the same two methods:
+
+      * :meth:`quantize_rows`  — x (..., D) -> (codes int8, scale, zero)
+      * :meth:`dequant_rows`   — inverse, dispatched on the execution
+        backend (``pallas`` uses the fused ``kv_dequant_rows`` kernel).
+    """
+
+    name = "kv_int8"
+    stochastic = False
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        from .kv_cache import quantize_kv_rows
+        bits = spec.bits or 8
+        codes8, scale, zero = quantize_kv_rows(x2d, bits)
+        from .quantizers import QTensor
+        return QTensor.from_int8(codes8, scale[..., None], zero[..., None],
+                                 bits, x2d.shape)
+
+    def quantize_rows(self, x, bits: int = 8):
+        from .kv_cache import quantize_kv_rows
+        return quantize_kv_rows(x, bits)
+
+    def dequant_rows(self, codes8, scale, zero, bits: int = 8, *,
+                     backend: str = "simulate", interpret=None):
+        from .kv_cache import dequant_kv_rows
+        return dequant_kv_rows(codes8, scale, zero, bits,
+                               backend=backend, interpret=interpret)
+
+
+def resolve_kv_cache_spec(value) -> Optional[QuantizerSpec]:
+    """Coerce the serving engine's quantized-KV policy knob.
+
+    ``None``/``False`` => full-precision cache; ``True`` => the default
+    ``kv_int8:8``; otherwise any spec-ish value (``"kv_int8:8"``, a
+    :class:`QuantizerSpec`, ...) naming a registered cache quantizer.
+    """
+    if value is None or value is False:
+        return None
+    if value is True:
+        value = KVCacheInt8.name
+    spec = QuantizerSpec.of(value)
+    q = get_quantizer(spec.name or KVCacheInt8.name)
+    if not hasattr(q, "quantize_rows") or not hasattr(q, "dequant_rows"):
+        raise ValueError(
+            f"quantizer {spec.name!r} cannot serve the {KV_CACHE_ROLE!r} "
+            f"role: it lacks the quantize_rows/dequant_rows cache protocol")
+    return spec if spec.name else dataclasses.replace(
+        spec, name=KVCacheInt8.name)
+
+
 register_quantizer("ptq_det", DeterministicPTQ())
 register_quantizer("ptq", StochasticPTQ())
 register_quantizer("psq", StochasticPSQ())
 register_quantizer("bhq", BlockHouseholder())
+register_quantizer("kv_int8", KVCacheInt8())

@@ -21,8 +21,13 @@ import jax
 import jax.flatten_util
 import jax.numpy as jnp
 
+from .bhq import bhq_exact_variance
+from .quantizers import (_EPS, dynamic_range, num_bins, row_dynamic_range,
+                         sr_variance_exact)
+
 __all__ = [
     "empirical_mean_and_variance",
+    "quantizer_variance",
     "fqt_gradient_stats",
     "theorem2_path_norms",
     "variance_of_tree",
@@ -47,6 +52,45 @@ def empirical_mean_and_variance(quant_fn: Callable, x: jax.Array,
     mean = jnp.mean(samples, axis=0)
     var = jnp.sum(jnp.var(samples, axis=0))
     return mean, var
+
+
+def quantizer_variance(x: jax.Array, quantizer: str = "ptq", bits: int = 8,
+                       **params) -> jax.Array:
+    """Exact conditional variance ``Var[Q_b(x) | x]`` summed over entries.
+
+    Proposition 4: the stochastic round contributes ``p(1-p)`` per entry,
+    ``p = frac(S(x - Z))``; dequantization pushes that noise through the
+    transform's inverse, so
+
+      * ``ptq``  —  ``sum p(1-p) / S^2``             (one scalar scale)
+      * ``psq``  —  ``sum_i [sum_d p(1-p)]_i / s_i^2``  (per-row scales)
+      * ``bhq``  —  the same sum through the ``S^{-1} = diag(1/s) Q`` column
+                    norms (:func:`~repro.core.bhq.bhq_exact_variance`);
+                    accepts ``block_rows`` / ``g_search``.
+
+    Exact modulo code clipping at the bin boundaries (rare by construction),
+    the caveat :func:`~repro.core.quantizers.sr_variance_exact` carries.
+    Deterministic — no PRNG key: the variance is a function of the transform
+    alone, which is what lets tests cross-check it against
+    :func:`empirical_mean_and_variance` without sharing randomness.
+    """
+    B = num_bins(bits)
+    if quantizer == "ptq":
+        scale = B / jnp.maximum(dynamic_range(x), _EPS)
+        t = scale * (x - jnp.min(x))
+        return sr_variance_exact(t) / scale ** 2
+    if quantizer == "psq":
+        rows = x.reshape(-1, x.shape[-1])
+        scale = B / jnp.maximum(row_dynamic_range(rows)[:, None], _EPS)
+        t = scale * (rows - jnp.min(rows, axis=-1, keepdims=True))
+        p = t - jnp.floor(t)
+        return jnp.sum(p * (1.0 - p) / scale ** 2)
+    if quantizer == "bhq":
+        return bhq_exact_variance(
+            x, bits, block_rows=params.get("block_rows", 1024),
+            g_search=params.get("g_search", "refined"))
+    raise ValueError(f"unknown quantizer {quantizer!r}; "
+                     "expected ptq | psq | bhq")
 
 
 def fqt_gradient_stats(grad_fn: Callable, key: jax.Array,

@@ -1,9 +1,17 @@
-"""Serving driver: prefill + batched greedy decode with a quantized model.
+"""Serving CLI: a thin driver over the continuous-batching engine.
 
-Inference quantization (paper Sec. 1): weights/activations through the
-deterministic forward quantizers; no gradient path.  The loop is the
-standard two-phase serving pattern (prefill once, then step the decode jit),
-with simple continuous-batching slots.
+Inference quantization (paper Sec. 1): weights/activations run through the
+deterministic forward quantizers; no gradient path.  The engine
+(:mod:`repro.serve`) owns the scheduling — a fixed pool of decode slots kept
+at full static batch, per-request prefill, EOS/length eviction — and the
+optional int8 KV cache; this module parses arguments, builds (or restores)
+the parameters, submits a mixed-length synthetic workload, and reports
+throughput + per-token latency percentiles.
+
+``generate`` is the legacy static-batch helper (prefill once, decode the
+whole batch in lockstep) kept for the examples; it now stops early once
+every row has emitted ``eos_id`` instead of always burning ``max_new``
+steps.
 """
 
 from __future__ import annotations
@@ -13,18 +21,25 @@ import time
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..configs import get_config
 from ..core import QuantPolicy
-from ..data import make_batch_for
 from ..models import build_model
+from ..serve import ServeEngine
 
 __all__ = ["generate", "main"]
 
 
 def generate(model, params, batch, policy: QuantPolicy, *, max_new: int,
-             max_seq: int, greedy: bool = True, key=None):
-    """Prefill the prompt then decode ``max_new`` tokens. Returns (B, max_new)."""
+             max_seq: int, greedy: bool = True, key=None, eos_id=None):
+    """Prefill the prompt then greedy-decode up to ``max_new`` tokens.
+
+    Returns (B, n) with n <= max_new: decoding stops as soon as every row
+    has emitted ``eos_id`` (rows that finish early keep emitting ``eos_id``
+    while the rest of the batch drains).  ``eos_id=None`` disables early
+    stopping and always returns (B, max_new).
+    """
     cfg = model.cfg
     prefill = jax.jit(lambda p, b: model.prefill(p, b, policy, max_seq))
     decode = jax.jit(lambda p, c, b: model.decode(p, c, b, policy),
@@ -33,8 +48,15 @@ def generate(model, params, batch, policy: QuantPolicy, *, max_new: int,
     logits, cache = prefill(params, batch)
     out = []
     tok = jnp.argmax(logits[:, -1, :cfg.vocab_size], axis=-1)[:, None]
-    for i in range(max_new):
+    B = tok.shape[0]
+    finished = jnp.zeros((B,), bool)
+    for _ in range(max_new):
+        if eos_id is not None:
+            finished = finished | (tok[:, 0] == eos_id)
+            tok = jnp.where(finished[:, None], eos_id, tok)
         out.append(tok)
+        if eos_id is not None and bool(finished.all()):
+            break
         dbatch = {"tokens": tok.astype(jnp.int32)}
         if cfg.family == "vlm":
             # stub frontend: decode steps feed token embeddings directly
@@ -44,32 +66,99 @@ def generate(model, params, batch, policy: QuantPolicy, *, max_new: int,
     return jnp.concatenate(out, axis=1)
 
 
+def _latency_stats(step_times):
+    dts = np.asarray([dt for dt, n in step_times if n > 0])
+    if dts.size == 0:
+        return 0.0, 0.0
+    return float(np.percentile(dts, 50)), float(np.percentile(dts, 95))
+
+
 def main(argv=None):
-    ap = argparse.ArgumentParser(description="quantized serving driver")
+    ap = argparse.ArgumentParser(
+        description="continuous-batching quantized serving driver")
     ap.add_argument("--arch", default="statquant-tx")
-    ap.add_argument("--smoke", action="store_true", default=True)
-    ap.add_argument("--full", dest="smoke", action="store_false")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--max-new", type=int, default=32)
+    ap.add_argument("--smoke", dest="smoke", action="store_true",
+                    help="reduced config (default)")
+    ap.add_argument("--full", dest="smoke", action="store_false",
+                    help="full-size config")
+    ap.set_defaults(smoke=True)
+    ap.add_argument("--slots", type=int, default=4,
+                    help="decode-slot pool size (static decode batch)")
+    ap.add_argument("--max-seq", type=int, default=64,
+                    help="per-slot KV cache length")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--min-prompt", type=int, default=4)
+    ap.add_argument("--max-prompt", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="<= 0 => greedy")
+    ap.add_argument("--top-k", type=int, default=0, help="<= 0 => disabled")
+    ap.add_argument("--eos", type=int, default=None,
+                    help="EOS token id (evicts the slot on emission)")
+    ap.add_argument("--kv-cache", choices=["int8", "fp32"], default="int8",
+                    help="KV-cache storage: int8 = ~4x more resident slots "
+                         "at equal HBM (core/kv_cache.py)")
+    ap.add_argument("--backend", default="simulate",
+                    choices=["simulate", "native", "pallas"],
+                    help="execution backend for the quantized ops, "
+                         "including the int8-KV dequant")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="restore params from an engine TrainState "
+                         "checkpoint instead of random init")
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    model = build_model(cfg)
-    policy = QuantPolicy.qat()                      # fwd-only quantization
-    params = model.init(jax.random.PRNGKey(0))
-    batch = make_batch_for(cfg, args.batch, args.prompt_len)
-    batch.pop("labels", None)
+    policy = QuantPolicy.qat(backend=args.backend)  # fwd-only quantization
+    kv_quant = args.kv_cache == "int8"
+    if args.ckpt_dir:
+        eng = ServeEngine.from_checkpoint(
+            cfg, args.ckpt_dir, policy=policy, slots=args.slots,
+            max_seq=args.max_seq, kv_quant=kv_quant, eos_id=args.eos,
+            seed=args.seed)
+    else:
+        params = build_model(cfg).init(jax.random.PRNGKey(args.seed))
+        eng = ServeEngine(cfg, params, policy=policy, slots=args.slots,
+                          max_seq=args.max_seq, kv_quant=kv_quant,
+                          eos_id=args.eos, seed=args.seed)
+
+    # warmup: compile the decode step AND every prefill/insert length
+    # bucket the workload can hit, off the clock
+    hi = min(args.max_prompt, args.max_seq - 1)
+    lo = min(args.min_prompt, hi)
+    b = 1
+    while b < hi:
+        b *= 2
+        if b >= lo:
+            eng.submit([1] * min(b, hi), max_new=2)
+    eng.submit([1], max_new=2)
+    eng.run()
+    eng.step_times.clear()
+
+    rng = np.random.RandomState(args.seed)
+    for _ in range(args.requests):
+        plen = int(rng.randint(lo, hi + 1))
+        prompt = rng.randint(0, cfg.vocab_size, size=plen)
+        eng.submit(prompt, max_new=args.max_new,
+                   temperature=args.temperature, top_k=args.top_k)
 
     t0 = time.time()
-    toks = generate(model, params, batch, policy,
-                    max_new=args.max_new,
-                    max_seq=args.prompt_len + args.max_new + 1)
+    completions = eng.run()
     dt = time.time() - t0
-    n = args.batch * args.max_new
-    print(f"[serve] generated {n} tokens in {dt:.2f}s "
-          f"({n/dt:.1f} tok/s batched)")
-    print("[serve] sample:", toks[0, :16].tolist())
+    n_tok = sum(len(c.tokens) for c in completions.values())
+    p50, p95 = _latency_stats(eng.step_times)
+    print(f"[serve] {len(completions)} requests, {n_tok} tokens in "
+          f"{dt:.2f}s ({n_tok / max(dt, 1e-9):.1f} tok/s, "
+          f"kv={args.kv_cache}, slots={args.slots})")
+    print(f"[serve] per-token latency p50 {p50 * 1e3:.2f}ms "
+          f"p95 {p95 * 1e3:.2f}ms")
+    by_reason = {}
+    for c in completions.values():
+        by_reason[c.reason] = by_reason.get(c.reason, 0) + 1
+    print(f"[serve] finish reasons: {by_reason}")
+    if completions:
+        rid0 = min(completions)
+        print("[serve] sample:", completions[rid0].tokens[:16])
 
 
 if __name__ == "__main__":

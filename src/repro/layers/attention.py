@@ -17,12 +17,12 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import QuantPolicy
+from ..core import QuantPolicy, get_quantizer, resolve_kv_cache_spec
 from .common import dense, init_dense
 from .embeddings import apply_mrope, apply_rope
 
 __all__ = ["init_attention", "attention", "decode_attention",
-           "init_kv_cache", "cross_attention_kv"]
+           "init_kv_cache", "init_kv_cache_quant", "cross_attention_kv"]
 
 _NEG = -1e30
 
@@ -145,33 +145,86 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
     }
 
 
+def init_kv_cache_quant(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+    """int8-quantized KV cache (core/kv_cache.py codec): each of k/v stores
+    shifted-signed int8 codes plus one (scale, zero) pair per (batch,
+    position) row — ~4x less HBM per resident slot than the fp32 cache.
+
+    Scales initialize to 1 (not 0) so untouched rows dequantize to finite
+    values; they are masked out of attention by the position mask anyway.
+    """
+    flat = cfg.n_kv_heads * cfg.hd
+
+    def one():
+        return {"codes": jnp.zeros((batch, max_seq, flat), jnp.int8),
+                "scale": jnp.ones((batch, max_seq), jnp.float32),
+                "zero": jnp.zeros((batch, max_seq), jnp.float32)}
+    return {"k": one(), "v": one()}
+
+
+def _is_quant_kv(cache: dict) -> bool:
+    return isinstance(cache["k"], dict)
+
+
 def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
                      key, policy: QuantPolicy, cfg: ArchConfig,
-                     path: str = "attn"):
-    """One-token attention step. x: (B, 1, d); index: scalar position.
+                     path: str = "attn", kv_quant=None):
+    """One-token attention step. x: (B, 1, d).
 
-    Returns (y, new_cache). Attends over cache positions <= index.
+    ``index``: scalar position shared by the whole batch (the classic
+    decode loop) or a ``(B,)`` vector of per-slot positions (continuous
+    batching — every slot sits at its own depth in its own sequence).
+
+    ``cache`` is either the fp ``init_kv_cache`` layout or the int8
+    ``init_kv_cache_quant`` layout (detected structurally); for the latter
+    the new row is quantized on write and the resident cache dequantized on
+    read through the execution backend selected by ``policy.backend``
+    (``pallas`` = the fused ``kv_dequant_rows`` kernel).  ``kv_quant``
+    optionally names the registered cache quantizer (default ``kv_int8:8``).
+
+    Returns (y, new_cache). Each slot attends over positions <= its index.
     """
     B = x.shape[0]
     hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     G = H // KV
-    positions = jnp.full((B, 1), index, jnp.int32)
+    pos = jnp.broadcast_to(jnp.asarray(index, jnp.int32).reshape(-1), (B,))
+    positions = pos[:, None]
     if cfg.rope == "mrope":
         positions = jnp.broadcast_to(positions[None], (3, B, 1))
     q, k_new, v_new = _qkv(p, x, key, policy, cfg, positions, path)
     flat = KV * hd
-    cache = {
-        "k": jax.lax.dynamic_update_slice(
-            cache["k"], k_new.reshape(B, 1, flat).astype(cache["k"].dtype),
-            (0, index, 0)),
-        "v": jax.lax.dynamic_update_slice(
-            cache["v"], v_new.reshape(B, 1, flat).astype(cache["v"].dtype),
-            (0, index, 0)),
-    }
-    S = cache["k"].shape[1]
-    k = cache["k"].reshape(B, S, KV, hd).astype(x.dtype)
-    v = cache["v"].reshape(B, S, KV, hd).astype(x.dtype)
-    mask = (jnp.arange(S) <= index)[None, None, None, None, :]  # (1,1,1,1,S)
+    bidx = jnp.arange(B)
+    rows_k = k_new.reshape(B, flat)
+    rows_v = v_new.reshape(B, flat)
+    if _is_quant_kv(cache):
+        spec = resolve_kv_cache_spec(True if kv_quant is None else kv_quant)
+        qz = get_quantizer(spec.name)
+        bits = spec.bits or 8
+
+        def put(side, rows):
+            codes, scale, zero = qz.quantize_rows(rows, bits)
+            return {"codes": side["codes"].at[bidx, pos].set(codes),
+                    "scale": side["scale"].at[bidx, pos].set(scale),
+                    "zero": side["zero"].at[bidx, pos].set(zero)}
+        cache = {"k": put(cache["k"], rows_k), "v": put(cache["v"], rows_v)}
+        S = cache["k"]["codes"].shape[1]
+
+        def get(side):
+            rows = qz.dequant_rows(side["codes"], side["scale"], side["zero"],
+                                   bits, backend=policy.backend,
+                                   interpret=policy.pallas_interpret)
+            return rows.reshape(B, S, KV, hd).astype(x.dtype)
+        k, v = get(cache["k"]), get(cache["v"])
+    else:
+        cache = {
+            "k": cache["k"].at[bidx, pos].set(rows_k.astype(cache["k"].dtype)),
+            "v": cache["v"].at[bidx, pos].set(rows_v.astype(cache["v"].dtype)),
+        }
+        S = cache["k"].shape[1]
+        k = cache["k"].reshape(B, S, KV, hd).astype(x.dtype)
+        v = cache["v"].reshape(B, S, KV, hd).astype(x.dtype)
+    mask = (jnp.arange(S)[None, :] <= pos[:, None])          # (B, S)
+    mask = mask[:, None, None, None, :]                      # (B,1,1,1,S)
     out = _sdpa(q.reshape(B, 1, KV, G, hd), k, v, mask)
     y = dense(p["wo"], out.reshape(B, 1, H * hd), key, policy, 4,
               f"{path}.wo")

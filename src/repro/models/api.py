@@ -67,8 +67,11 @@ class Model:
     init: Callable                    # key -> params
     loss: Callable                    # (params, batch, key, policy) -> (loss, metrics)
     prefill: Callable                 # (params, batch, policy, max_seq) -> (logits, cache)
-    decode: Callable                  # (params, cache, batch, policy) -> (logits, cache)
-    init_cache: Callable              # (batch, max_seq, dtype) -> cache
+    decode: Callable                  # (params, cache, batch, policy, [positions]) -> (logits, cache)
+    init_cache: Callable              # (cfg, batch, max_seq, dtype) -> cache
+    # int8-KV variant of init_cache for serving (None where the family has
+    # no transformer KV cache to quantize — see lm.init_lm_cache_quant)
+    init_cache_quant: Callable = None
 
     def quant_paths(self) -> tuple:
         """Logical paths of this model's quantized GEMMs (policy overrides
@@ -136,6 +139,7 @@ def build_model(cfg: ArchConfig) -> Model:
                 params, cache, batch, policy, cfg, **kw),
             init_cache=encdec.init_encdec_cache,
         )
+    quantizable = not (cfg.family == "hybrid" or cfg.ssm_kind == "rwkv6")
     return Model(
         cfg=cfg,
         init=lambda key: lm.init_lm_params(key, cfg),
@@ -146,4 +150,5 @@ def build_model(cfg: ArchConfig) -> Model:
         decode=lambda params, cache, batch, policy, **kw: lm.lm_decode(
             params, cache, batch, policy, cfg, **kw),
         init_cache=lm.init_lm_cache,
+        init_cache_quant=lm.init_lm_cache_quant if quantizable else None,
     )

@@ -151,8 +151,11 @@ def init_encdec_cache(cfg: ArchConfig, batch: int, max_seq: int,
 
 
 def encdec_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
-                   max_seq=None, dtype=None, sdpa_hint=None):
-    """Encode audio + teacher-force the prompt; return logits + caches."""
+                   max_seq=None, dtype=None, sdpa_hint=None, last_pos=None):
+    """Encode audio + teacher-force the prompt; return logits + caches.
+
+    ``last_pos``: optional ``(B,)`` int32 — per-row logit position (serving
+    engines right-pad prompts into length buckets)."""
     key = jax.random.PRNGKey(0)
     frames = batch["frames"]
     if dtype is not None:
@@ -163,7 +166,9 @@ def encdec_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
     max_seq = max_seq or T
     h, (skv, xkv) = _decode_seq(params, tokens, enc, key, policy, cfg,
                                 want_cache=True, sdpa_hint=sdpa_hint)
-    logits = lm_head(params["lm_head"], h[:, -1:], key, policy)
+    h_last = (h[:, -1:] if last_pos is None
+              else h[jnp.arange(B), last_pos][:, None])
+    logits = lm_head(params["lm_head"], h_last, key, policy)
     def pad(x):
         return jnp.pad(x, ((0, 0), (0, 0), (0, max_seq - x.shape[2]), (0, 0)))
     cache = {"self_kv": jax.tree.map(pad, skv), "cross_kv": xkv,
@@ -171,13 +176,18 @@ def encdec_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
     return logits, cache
 
 
-def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
+def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig,
+                  positions=None, kv_quant=None):
+    """One-token decoder step.  ``positions``: optional ``(B,)`` per-slot
+    positions overriding the cache's scalar ``index`` (continuous-batching
+    slots each sit at their own depth)."""
     key = jax.random.PRNGKey(0)
     tokens = batch["tokens"]                                    # (B, 1)
     B = tokens.shape[0]
-    index = cache["index"]
-    h = (embed(params["embed"], tokens)
-         + params["pos_embed"][index][None, None]).astype(
+    index = cache["index"] if positions is None else positions
+    pe = params["pos_embed"][index]         # scalar -> (d,), (B,) -> (B, d)
+    pe = pe[None, None] if pe.ndim == 1 else pe[:, None]
+    h = (embed(params["embed"], tokens) + pe).astype(
              cache["self_kv"]["k"].dtype)
 
     def body(hh, xs):
@@ -185,13 +195,15 @@ def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
         x = apply_norm(lp["ln1"], hh, cfg.norm)
         att, skv = decode_attention(lp["self_attn"], x, skv, index, lk,
                                     policy, cfg,
-                                    path="decoder.layers.self_attn")
+                                    path="decoder.layers.self_attn",
+                                    kv_quant=kv_quant)
         hh = hh + att.astype(hh.dtype)
         x = apply_norm(lp["ln_x"], hh, cfg.norm)
         Sx = xkv["k"].shape[1]
         ck = xkv["k"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
         cv = xkv["v"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
-        pos = jnp.full((B, 1), index, jnp.int32)
+        pos = (jnp.zeros((B, 1), jnp.int32)
+               + jnp.asarray(index, jnp.int32).reshape(-1, 1))
         hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
                             causal=False, kv_override=(ck, cv),
                             path="decoder.layers.cross_attn").astype(hh.dtype)

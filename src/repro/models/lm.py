@@ -19,14 +19,15 @@ from ..configs.base import ArchConfig
 from ..core import QuantPolicy
 from ..layers import (apply_norm, attention, decode_attention, embed,
                       init_attention, init_embedding, init_kv_cache,
-                      init_lm_head, init_mamba2_layer, init_mamba2_state,
-                      init_mlp, init_moe, init_norm, init_rwkv_layer,
-                      init_rwkv_state, lm_head, mamba2_decode_step,
-                      mamba2_layer, mlp, moe_block, rwkv_decode_step,
-                      rwkv_layer)
+                      init_kv_cache_quant, init_lm_head, init_mamba2_layer,
+                      init_mamba2_state, init_mlp, init_moe, init_norm,
+                      init_rwkv_layer, init_rwkv_state, lm_head,
+                      mamba2_decode_step, mamba2_layer, mlp, moe_block,
+                      rwkv_decode_step, rwkv_layer)
 
 __all__ = ["init_lm_params", "lm_loss", "lm_prefill", "lm_decode",
-           "init_lm_cache", "cross_entropy", "scan_or_loop"]
+           "init_lm_cache", "init_lm_cache_quant", "cross_entropy",
+           "scan_or_loop"]
 
 
 def scan_or_loop(body, carry, xs, unroll: bool):
@@ -354,9 +355,33 @@ def init_lm_cache(cfg: ArchConfig, batch: int, max_seq: int,
     return {"kv": kv, "index": jnp.zeros((), jnp.int32)}
 
 
+def init_lm_cache_quant(cfg: ArchConfig, batch: int, max_seq: int):
+    """int8-quantized variant of :func:`init_lm_cache` (serving decode).
+
+    Only the transformer families carry a KV cache to quantize; the
+    recurrent state of rwkv6/hybrid models is read-modify-write every step
+    and stays full precision.  ``index`` is a per-slot ``(batch,)`` vector —
+    the continuous-batching engine steps every slot at its own position.
+    """
+    if cfg.family == "hybrid" or cfg.ssm_kind == "rwkv6":
+        raise ValueError(
+            f"{cfg.name}: quantized KV caches need a transformer KV cache; "
+            f"family={cfg.family!r}/ssm_kind={cfg.ssm_kind!r} keeps dense "
+            f"recurrent state")
+    kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+                      init_kv_cache_quant(cfg, batch, max_seq))
+    return {"kv": kv, "index": jnp.zeros((batch,), jnp.int32)}
+
+
 def lm_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
-               max_seq: Optional[int] = None, dtype=None, sdpa_hint=None):
-    """Forward the prompt; return (last-position logits, cache)."""
+               max_seq: Optional[int] = None, dtype=None, sdpa_hint=None,
+               last_pos=None):
+    """Forward the prompt; return (last-position logits, cache).
+
+    ``last_pos``: optional ``(B,)`` int32 — take each row's logits at that
+    position instead of ``T - 1`` (serving engines right-pad prompts into
+    length buckets; the true last token then sits before the padding).
+    """
     key = jax.random.PRNGKey(0)                   # fwd quantizers are deterministic
     h = _input_embed(params, batch, cfg)
     if dtype is not None:
@@ -367,7 +392,9 @@ def lm_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,
     h, _, cache = _forward_seq(params, h, key, policy, cfg, pos,
                                want_cache=True, sdpa_hint=sdpa_hint)
     h = apply_norm(params["final_norm"], h, cfg.norm)
-    logits = lm_head(params["lm_head"], h[:, -1:], key, policy)
+    h_last = (h[:, -1:] if last_pos is None
+              else h[jnp.arange(B), last_pos][:, None])
+    logits = lm_head(params["lm_head"], h_last, key, policy)
 
     index = jnp.asarray(T, jnp.int32)
     if cfg.family == "hybrid":
@@ -397,12 +424,19 @@ def _cache_dtype(cache):
     return jnp.float32
 
 
-def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
-    """One-token decode step: batch has `tokens` (B,1) or `embeds` (B,1,d)."""
+def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig,
+              positions=None, kv_quant=None):
+    """One-token decode step: batch has `tokens` (B,1) or `embeds` (B,1,d).
+
+    ``positions``: optional ``(B,)`` per-slot positions overriding the
+    cache's own ``index`` — the continuous-batching serving engine owns the
+    slot positions and passes them every step.  ``kv_quant`` names the cache
+    quantizer when ``cache`` uses the int8 layout (``init_lm_cache_quant``).
+    """
     key = jax.random.PRNGKey(0)
     h = _input_embed(params, batch, cfg).astype(_cache_dtype(cache))
     B = h.shape[0]
-    index = cache["index"]
+    index = cache["index"] if positions is None else positions
 
     if cfg.family == "hybrid":
         h0 = h
@@ -454,7 +488,8 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig):
             lp, kvc, lk = xs
             x = apply_norm(lp["ln1"], hh, cfg.norm)
             att, kvc = decode_attention(lp["attn"], x, kvc, index, lk,
-                                        policy, cfg, path="layers.attn")
+                                        policy, cfg, path="layers.attn",
+                                        kv_quant=kv_quant)
             hh = hh + att.astype(hh.dtype)
             x = apply_norm(lp["ln2"], hh, cfg.norm)
             if cfg.moe_experts:

@@ -1,0 +1,7 @@
+"""Serving: continuous-batching engine over the quantized decode path."""
+
+from .engine import Completion, Request, ServeEngine
+from .sampling import sample_tokens, slot_keys
+
+__all__ = ["ServeEngine", "Request", "Completion", "sample_tokens",
+           "slot_keys"]

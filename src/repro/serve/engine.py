@@ -1,0 +1,380 @@
+"""Continuous-batching serving engine over the quantized decode path.
+
+The inference counterpart of :mod:`repro.engine`: one object that owns a
+fixed pool of decode slots and keeps the jitted one-token step running at
+**full static batch** while requests of arbitrary lengths stream through —
+
+  * **scheduler** — a FIFO request queue is drained into free slots
+    (``_admit``); each slot carries its own position, sampling parameters,
+    and PRNG stream; slots are evicted the moment their request hits EOS,
+    its ``max_new`` budget, or the cache length (``_evict``).  The decode
+    step never recompiles: inactive slots run on dummy tokens and their
+    samples are discarded.
+  * **prefill** — per-request (batch 1), right-padded into power-of-two
+    length buckets so at most ``log2(max_seq)`` prefill programs are ever
+    compiled; the true-last-position logits come via ``prefill(...,
+    last_pos=...)`` and only the real rows are inserted into the slot's
+    cache (causality makes the padded rows' K/V irrelevant).
+  * **int8 KV cache** — ``kv_quant=True`` stores keys/values as per-row
+    affine int8 codes (core/kv_cache.py, the ``kv_cache`` registry role):
+    ~4x less HBM per resident slot, so ~4x more slots at equal memory
+    (benchmarks/bench_serve.py measures both axes).  Dequantization runs
+    through the execution backend the policy selects (simulate / native /
+    pallas).
+  * **checkpoint startup** — :meth:`ServeEngine.from_checkpoint` restores
+    the ``params`` subtree of an engine :class:`~repro.engine.TrainState`
+    checkpoint (legacy ``{params, opt}`` checkpoints restore identically),
+    so a trained run is servable without conversion.
+
+Determinism: sampling keys are ``fold_in(fold_in(seed_key, rid), count)`` —
+a pure function of the request, never of slot assignment — so for a fixed
+seed, workload, and pool size the engine's outputs are fully reproducible.
+One caveat on *traffic* independence: the randomness never depends on what
+else is resident, but under per-**tensor** forward quantizers the logits
+can — ``Q_f`` computes its dynamic range over the whole decode batch, so
+co-resident slots couple at the quantization-noise level (~1e-2 on smoke
+logits).  Exact or per-row forward quantization removes the coupling.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..checkpoint import CheckpointManager
+from ..core import QuantPolicy, quantize_kv_rows, resolve_kv_cache_spec
+from ..models import build_model
+from .sampling import sample_tokens, slot_keys
+
+__all__ = ["Request", "Completion", "ServeEngine"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One generation request.  ``eos_id=None`` inherits the engine's."""
+
+    rid: int
+    prompt: tuple                      # token ids, 1 <= len < max_seq
+    max_new: int = 32
+    temperature: float = 0.0           # <= 0 => greedy
+    top_k: int = 0                     # <= 0 => disabled
+    eos_id: Optional[int] = None
+
+
+@dataclasses.dataclass(frozen=True)
+class Completion:
+    rid: int
+    prompt_len: int
+    tokens: List[int]                  # includes the terminating EOS, if any
+    reason: str                        # "eos" | "length"
+
+
+class _Slot:
+    """Host-side state of one decode slot."""
+
+    __slots__ = ("req", "pos", "tokens")
+
+    def __init__(self):
+        self.req: Optional[Request] = None
+        self.pos = 0                   # next cache write position
+        self.tokens: List[int] = []    # sampled so far (incl. EOS)
+
+    @property
+    def active(self) -> bool:
+        return self.req is not None
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class ServeEngine:
+    """See module docstring.  Typical lifecycle::
+
+        eng = ServeEngine.from_checkpoint(cfg, "/ckpts", slots=16,
+                                          kv_quant=True, eos_id=2)
+        for prompt in prompts:
+            eng.submit(prompt, max_new=64, temperature=0.8, top_k=40)
+        completions = eng.run()          # drains queue + pool
+
+    ``submit``/``run`` may be interleaved — ``run`` returns when the queue
+    and every slot are empty; later submissions start a new drain.
+    """
+
+    def __init__(self, cfg, params, *, policy: Optional[QuantPolicy] = None,
+                 slots: int = 4, max_seq: int = 64, kv_quant=False,
+                 eos_id: Optional[int] = None, seed: int = 0):
+        if cfg.family in ("vlm", "audio"):
+            raise ValueError(
+                f"{cfg.name}: the serving engine drives token-input decoder "
+                f"LMs; family {cfg.family!r} needs a frontend the stub "
+                f"pipeline does not provide")
+        if cfg.family == "hybrid" or cfg.ssm_kind:
+            raise ValueError(
+                f"{cfg.name}: continuous batching needs per-slot KV-cache "
+                f"lanes; recurrent-state families (ssm/hybrid) are not "
+                f"supported yet")
+        self.cfg = cfg
+        self.model = build_model(cfg)
+        self.policy = policy or QuantPolicy.qat()
+        self.params = params
+        self.slots = slots
+        self.max_seq = max_seq
+        self.eos_id = eos_id
+        self.kv_spec = resolve_kv_cache_spec(kv_quant)
+        if self.kv_spec is not None and self.model.init_cache_quant is None:
+            raise ValueError(f"{cfg.name}: no quantized-cache support for "
+                             f"this family (recurrent state)")
+        self._base_key = jax.random.PRNGKey(seed)
+        self._queue: deque = deque()
+        self._slots = [_Slot() for _ in range(slots)]
+        self._next_rid = 0
+        self._completions: Dict[int, Completion] = {}
+        self.step_times: List[tuple] = []       # (seconds, tokens_emitted)
+
+        self._cache = self._init_cache()
+        self._decode = jax.jit(self._step_fn, donate_argnums=(1,))
+        self._prefill_fns: dict = {}
+        self._insert_fns: dict = {}
+        self._sample1 = jax.jit(
+            lambda lg, key, t, k: sample_tokens(
+                lg[None], key[None], jnp.float32(t)[None],
+                jnp.int32(k)[None], cfg.vocab_size)[0])
+
+    # -- construction ------------------------------------------------------
+    @classmethod
+    def from_checkpoint(cls, cfg, ckpt_dir: str, step: Optional[int] = None,
+                        **kw) -> "ServeEngine":
+        """Restore ``params`` from an engine ``TrainState`` checkpoint (the
+        ``{params, opt}`` legacy layout restores the same subtree)."""
+        ckpt = CheckpointManager(ckpt_dir)
+        step = step if step is not None else ckpt.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {ckpt_dir!r}")
+        model = build_model(cfg)
+        abstract = jax.eval_shape(model.init, jax.random.PRNGKey(0))
+        params = ckpt.restore(step, {"params": abstract})["params"]
+        return cls(cfg, params, **kw)
+
+    def _init_cache(self):
+        if self.kv_spec is not None:
+            return self.model.init_cache_quant(self.cfg, self.slots,
+                                               self.max_seq)
+        cache = self.model.init_cache(self.cfg, self.slots, self.max_seq)
+        # per-slot positions: the engine owns them, but the cache's index
+        # leaf must match the (slots,) shape decode returns under vector
+        # positions, or the donated jit would retrace once
+        cache["index"] = jnp.zeros((self.slots,), jnp.int32)
+        return cache
+
+    # -- the jitted full-batch decode step ---------------------------------
+    def _step_fn(self, params, cache, tok, pos, rids, counts, temp, topk):
+        keys = slot_keys(self._base_key, rids, counts)
+        logits, cache = self.model.decode(
+            params, cache, {"tokens": tok[:, None]}, self.policy,
+            positions=pos, kv_quant=self.kv_spec)
+        nxt = sample_tokens(logits[:, -1], keys, temp, topk,
+                            self.cfg.vocab_size)
+        return cache, nxt
+
+    # -- prefill + slot insertion (compiled per length bucket) -------------
+    def _prefill(self, tokens: np.ndarray):
+        """(1, Lp) prompt -> (last-real-position logits (1,1,V), kv pytree
+        (L, 1, Lb, flat)).  Compiled once per power-of-two bucket."""
+        lp = tokens.shape[1]
+        lb = min(_bucket(lp), self.max_seq)   # slab must fit the cache lane
+        fn = self._prefill_fns.get(lb)
+        if fn is None:
+            def run(params, toks, last):
+                logits, cache = self.model.prefill(
+                    params, {"tokens": toks}, self.policy, max_seq=lb,
+                    last_pos=last)
+                return logits, cache["kv"]
+            fn = self._prefill_fns[lb] = jax.jit(run)
+        padded = np.zeros((1, lb), np.int32)
+        padded[0, :lp] = tokens[0]
+        return fn(self.params, jnp.asarray(padded),
+                  jnp.asarray([lp - 1], jnp.int32))
+
+    def _insert(self, cache, kv, slot: int, lp: int):
+        """Write the prefill bucket's rows of ``kv`` into ``slot``'s cache
+        lane (quantizing them when the cache is int8) and set its position
+        to the *real* prompt length ``lp``.
+
+        The whole bucket slab is written — compiled once per power-of-two
+        bucket, like prefill, not once per prompt length.  Rows >= lp hold
+        right-padding garbage, which is never observed: the position mask
+        hides them until the decode step overwrites each one (write at
+        ``pos`` strictly precedes the mask extending to ``pos``).
+        """
+        lb = kv["k"].shape[2]
+        fn = self._insert_fns.get(lb)
+        if fn is None:
+            quant = self.kv_spec is not None
+            bits = (self.kv_spec.bits or 8) if quant else None
+
+            def ins(cache, kv, slot_idx, lp_arr):
+                out = dict(cache)
+                out["kv"] = dict(cache["kv"])
+                for side in ("k", "v"):
+                    rows = kv[side]                        # (L, 1, lb, flat)
+                    if quant:
+                        codes, scale, zero = quantize_kv_rows(rows, bits)
+                        lane = dict(cache["kv"][side])
+                        lane["codes"] = jax.lax.dynamic_update_slice(
+                            lane["codes"], codes, (0, slot_idx, 0, 0))
+                        lane["scale"] = jax.lax.dynamic_update_slice(
+                            lane["scale"], scale, (0, slot_idx, 0))
+                        lane["zero"] = jax.lax.dynamic_update_slice(
+                            lane["zero"], zero, (0, slot_idx, 0))
+                        out["kv"][side] = lane
+                    else:
+                        dst = cache["kv"][side]
+                        out["kv"][side] = jax.lax.dynamic_update_slice(
+                            dst, rows.astype(dst.dtype), (0, slot_idx, 0, 0))
+                out["index"] = cache["index"].at[slot_idx].set(lp_arr)
+                return out
+            fn = self._insert_fns[lb] = jax.jit(ins, donate_argnums=(0,))
+        return fn(cache, kv, jnp.int32(slot), jnp.int32(lp))
+
+    # -- scheduler ---------------------------------------------------------
+    def submit(self, prompt: Sequence[int], max_new: int = 32,
+               temperature: float = 0.0, top_k: int = 0,
+               eos_id: Optional[int] = None) -> int:
+        """Queue one request; returns its request id."""
+        prompt = tuple(int(t) for t in prompt)
+        if not 1 <= len(prompt) <= self.max_seq - 1:
+            raise ValueError(
+                f"prompt length {len(prompt)} out of range [1, "
+                f"{self.max_seq - 1}] (max_seq={self.max_seq} needs room "
+                f"for at least one generated token)")
+        rid = self._next_rid
+        self._next_rid += 1
+        self._queue.append(Request(
+            rid=rid, prompt=prompt, max_new=max_new,
+            temperature=temperature, top_k=top_k,
+            eos_id=self.eos_id if eos_id is None else eos_id))
+        return rid
+
+    def _finish(self, slot: _Slot, reason: str):
+        req = slot.req
+        self._completions[req.rid] = Completion(
+            rid=req.rid, prompt_len=len(req.prompt),
+            tokens=list(slot.tokens), reason=reason)
+        slot.req = None
+        slot.tokens = []
+        slot.pos = 0
+
+    def _evict(self):
+        for slot in self._slots:
+            if not slot.active:
+                continue
+            req = slot.req
+            if req.eos_id is not None and slot.tokens \
+                    and slot.tokens[-1] == req.eos_id:
+                self._finish(slot, "eos")
+            elif len(slot.tokens) >= req.max_new:
+                self._finish(slot, "length")
+            elif slot.pos >= self.max_seq:
+                self._finish(slot, "length")     # cache lane full
+
+    def _admit(self):
+        for i, slot in enumerate(self._slots):
+            if slot.active or not self._queue:
+                continue
+            req = self._queue.popleft()
+            toks = np.asarray(req.prompt, np.int32)[None]
+            logits, kv = self._prefill(toks)
+            first = int(self._sample1(
+                logits[0, -1], slot_keys(
+                    self._base_key, jnp.asarray([req.rid], jnp.int32),
+                    jnp.asarray([0], jnp.int32))[0],
+                req.temperature, req.top_k))
+            self._cache = self._insert(self._cache, kv, i, len(req.prompt))
+            slot.req = req
+            slot.pos = len(req.prompt)
+            slot.tokens = [first]
+        # a request can terminate straight out of prefill (EOS as the very
+        # first sample, or max_new == 1) — evict before it burns a step
+        self._evict()
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> int:
+        """Admit waiting requests, run one full-batch decode step, record
+        the new tokens.  Returns the number of tokens emitted."""
+        self._evict()
+        self._admit()
+        live = [s for s in self._slots if s.active]
+        if not live:
+            return 0
+        B = self.slots
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        rids = np.full((B,), -1, np.int32)
+        counts = np.zeros((B,), np.int32)
+        temp = np.zeros((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            tok[i] = slot.tokens[-1]
+            pos[i] = slot.pos
+            rids[i] = slot.req.rid
+            counts[i] = len(slot.tokens)
+            temp[i] = slot.req.temperature
+            topk[i] = slot.req.top_k
+        t0 = time.perf_counter()
+        self._cache, nxt = self._decode(
+            self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(rids), jnp.asarray(counts), jnp.asarray(temp),
+            jnp.asarray(topk))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        dt = time.perf_counter() - t0
+        emitted = 0
+        for i, slot in enumerate(self._slots):
+            if not slot.active:
+                continue
+            slot.tokens.append(int(nxt[i]))
+            slot.pos += 1
+            emitted += 1
+        self.step_times.append((dt, emitted))
+        return emitted
+
+    def run(self, max_steps: Optional[int] = None) -> Dict[int, Completion]:
+        """Drive until the queue and pool drain; returns the completions
+        collected by THIS call ({rid: Completion}) and clears them — the
+        engine keeps no history, so a long-lived server never accumulates
+        past token lists and interleaved submit/run batches stay disjoint.
+        """
+        steps = 0
+        while self._queue or any(s.active for s in self._slots):
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self._evict()
+        done = self._completions
+        self._completions = {}
+        return done
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def active_slots(self) -> int:
+        return sum(s.active for s in self._slots)
+
+    @property
+    def queued(self) -> int:
+        return len(self._queue)
+
+    def completions(self) -> Dict[int, Completion]:
+        """Completions finished but not yet collected by a ``run`` call."""
+        return dict(self._completions)

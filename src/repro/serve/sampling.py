@@ -1,0 +1,57 @@
+"""Token sampling for the serving engine: greedy, temperature, top-k.
+
+All jittable and batched over decode slots, with *per-slot* sampling
+parameters (each resident request carries its own temperature/top-k) and
+per-slot PRNG keys derived by :func:`slot_keys` — the *randomness* is a
+pure function of ``(seed, request id, token index)``, never of slot
+assignment or batch composition.  (The logits themselves can still couple
+co-resident slots under per-tensor forward quantizers — see the engine
+docstring's determinism caveat.)
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["slot_keys", "sample_tokens"]
+
+_NEG = -1e30
+
+
+def slot_keys(base_key: jax.Array, rids: jax.Array,
+              counts: jax.Array) -> jax.Array:
+    """Per-slot sampling keys: ``fold_in(fold_in(base, rid), count)``.
+
+    rids/counts: (B,) int32 — the request id resident in each slot and how
+    many tokens it has sampled so far.  Inactive slots may pass any value
+    (their samples are discarded by the scheduler).
+    """
+    def one(r, c):
+        return jax.random.fold_in(jax.random.fold_in(base_key, r), c)
+    return jax.vmap(one)(rids, counts)
+
+
+def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
+                  top_k: jax.Array, vocab_size: int) -> jax.Array:
+    """Sample one token per slot.  logits: (B, Vp); keys: (B,) PRNG keys
+    (stacked); temperature/top_k: (B,) — ``temperature <= 0`` means greedy,
+    ``top_k <= 0`` disables the top-k filter.  Returns (B,) int32.
+
+    Padded-vocab logits (Vp > vocab_size) are masked before everything else
+    so padding rows can never be emitted.
+    """
+    B, vp = logits.shape
+    logits = logits.astype(jnp.float32)
+    if vp > vocab_size:
+        logits = logits.at[:, vocab_size:].set(_NEG)
+    greedy = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    k = jnp.clip(jnp.where(top_k <= 0, vocab_size, top_k), 1, vocab_size)
+    sorted_desc = jnp.sort(logits, axis=-1)[:, ::-1]
+    thresh = jnp.take_along_axis(sorted_desc, (k - 1)[:, None], axis=1)
+    filtered = jnp.where(logits >= thresh, logits, -jnp.inf)
+
+    temp = jnp.maximum(temperature, 1e-6)[:, None]
+    sampled = jax.vmap(jax.random.categorical)(keys, filtered / temp)
+    return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)

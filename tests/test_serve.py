@@ -1,0 +1,372 @@
+"""Serving correctness suite (continuous batching + int8 KV cache).
+
+Covers the ISSUE-4 acceptance surface:
+  * prefill-vs-stepwise logit parity (exact to float tolerance; quantized
+    forward within quantizer-noise tolerance) on all three backends
+  * int8-KV vs fp32-KV perplexity drift on the smoke LM
+  * scheduler invariants: no slot leak, mixed-length requests all complete,
+    EOS eviction, deterministic output under a fixed seed (and invariant to
+    the slot-pool size)
+  * checkpoint-driven startup from an engine TrainState checkpoint
+  * sampling semantics (greedy / temperature / top-k / padded vocab)
+
+Pallas-backend cases run the kernels in interpret mode and are slow-marked
+per repo convention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.models import build_model
+from repro.serve import ServeEngine
+from repro.serve.sampling import sample_tokens, slot_keys
+
+CFG = get_config("statquant-tx", smoke=True)
+MODEL = build_model(CFG)
+PARAMS = MODEL.init(jax.random.PRNGKey(0))
+B, T = 2, 8
+
+
+def stepwise_logits(policy, toks, quant_cache: bool, max_seq=None):
+    """Feed the prompt one token at a time; return last logits."""
+    b, t = toks.shape
+    max_seq = max_seq or t + 2
+    if quant_cache:
+        cache = MODEL.init_cache_quant(CFG, b, max_seq)
+    else:
+        cache = MODEL.init_cache(CFG, b, max_seq)
+        cache["index"] = jnp.zeros((b,), jnp.int32)
+    step = jax.jit(lambda c, tok, pos: MODEL.decode(
+        PARAMS, c, {"tokens": tok}, policy, positions=pos))
+    pos = jnp.zeros((b,), jnp.int32)
+    lg = None
+    for i in range(t):
+        lg, cache = step(cache, toks[:, i:i + 1], pos)
+        pos = pos + 1
+    return lg
+
+
+def make_toks(key=1):
+    return jax.random.randint(jax.random.PRNGKey(key), (B, T), 0,
+                              CFG.vocab_size)
+
+
+# ---------------------------------------------------------------------------
+# Prefill vs stepwise decode parity
+# ---------------------------------------------------------------------------
+
+BACKENDS = [("simulate", ()), ("native", ()),
+            ("pallas", (pytest.mark.slow,))]
+
+
+@pytest.mark.parametrize("backend", [pytest.param(b, marks=m)
+                                     for b, m in BACKENDS])
+def test_prefill_stepwise_parity_exact(backend):
+    """fp path: token-by-token decode reproduces prefill logits exactly."""
+    pol = QuantPolicy(enabled=False, backend=backend)
+    toks = make_toks()
+    lg_pre, _ = MODEL.prefill(PARAMS, {"tokens": toks}, pol, max_seq=T + 2)
+    lg_step = stepwise_logits(pol, toks, quant_cache=False)
+    assert float(jnp.max(jnp.abs(lg_pre - lg_step))) < 1e-4
+
+
+@pytest.mark.parametrize("backend", [pytest.param(b, marks=m)
+                                     for b, m in BACKENDS])
+def test_prefill_stepwise_parity_quantized_fwd(backend):
+    """Quantized forward: per-tensor Q_f sees different ranges for the full
+    prompt vs one-token slices, so parity holds to quantizer-noise
+    tolerance, not float tolerance."""
+    pol = QuantPolicy.qat(backend=backend)
+    toks = make_toks()
+    lg_pre, _ = MODEL.prefill(PARAMS, {"tokens": toks}, pol, max_seq=T + 2)
+    scale = float(jnp.max(jnp.abs(lg_pre)))
+    lg_step = stepwise_logits(pol, toks, quant_cache=False)
+    assert float(jnp.max(jnp.abs(lg_pre - lg_step))) < 0.05 * scale
+
+
+@pytest.mark.parametrize("backend", [pytest.param(b, marks=m)
+                                     for b, m in BACKENDS])
+def test_int8_kv_stepwise_close_to_prefill(backend):
+    """int8-KV decode stays within a small extra margin of the fp path."""
+    pol = QuantPolicy.qat(backend=backend)
+    toks = make_toks()
+    lg_pre, _ = MODEL.prefill(PARAMS, {"tokens": toks}, pol, max_seq=T + 2)
+    scale = float(jnp.max(jnp.abs(lg_pre)))
+    lg_q = stepwise_logits(pol, toks, quant_cache=True)
+    assert float(jnp.max(jnp.abs(lg_pre - lg_q))) < 0.10 * scale
+
+
+def test_prefill_last_pos_matches_unpadded():
+    """Right-padded prompts + last_pos reproduce the unpadded logits
+    (the engine's prompt length-bucketing correctness)."""
+    pol = QuantPolicy(enabled=False)
+    toks = make_toks()
+    lg_a, _ = MODEL.prefill(PARAMS, {"tokens": toks}, pol, max_seq=T)
+    padded = jnp.pad(toks, ((0, 0), (0, 5)))
+    lg_b, _ = MODEL.prefill(PARAMS, {"tokens": padded}, pol, max_seq=T + 5,
+                            last_pos=jnp.full((B,), T - 1, jnp.int32))
+    assert float(jnp.max(jnp.abs(lg_a - lg_b))) < 1e-4
+
+
+# ---------------------------------------------------------------------------
+# int8-KV perplexity drift
+# ---------------------------------------------------------------------------
+
+def _stepwise_ce(policy, toks, labels, quant_cache):
+    """Teacher-forced CE through the decode path (one token at a time)."""
+    b, t = toks.shape
+    if quant_cache:
+        cache = MODEL.init_cache_quant(CFG, b, t + 1)
+    else:
+        cache = MODEL.init_cache(CFG, b, t + 1)
+        cache["index"] = jnp.zeros((b,), jnp.int32)
+    step = jax.jit(lambda c, tok, pos: MODEL.decode(
+        PARAMS, c, {"tokens": tok}, policy, positions=pos))
+    pos = jnp.zeros((b,), jnp.int32)
+    total = 0.0
+    for i in range(t):
+        lg, cache = step(cache, toks[:, i:i + 1], pos)
+        pos = pos + 1
+        logp = jax.nn.log_softmax(
+            lg[:, -1, :CFG.vocab_size].astype(jnp.float32), axis=-1)
+        total += float(-jnp.mean(
+            jnp.take_along_axis(logp, labels[:, i:i + 1], axis=-1)))
+    return total / t
+
+
+def test_int8_kv_perplexity_drift():
+    from repro.data import make_batch_for
+    batch = make_batch_for(CFG, 4, 12)
+    pol = QuantPolicy.qat()
+    ce_fp = _stepwise_ce(pol, batch["tokens"], batch["labels"], False)
+    ce_q = _stepwise_ce(pol, batch["tokens"], batch["labels"], True)
+    # ppl ratio = exp(delta CE); int8 cache must not move ppl more than ~3%
+    assert abs(ce_q - ce_fp) < 0.03, (ce_fp, ce_q)
+
+
+# ---------------------------------------------------------------------------
+# Scheduler invariants
+# ---------------------------------------------------------------------------
+
+def _workload(eng, n, seed=0, max_new=5, temperature=0.0, top_k=0):
+    rng = np.random.RandomState(seed)
+    rids = []
+    for _ in range(n):
+        plen = int(rng.randint(2, 12))
+        rids.append(eng.submit(rng.randint(0, CFG.vocab_size, size=plen),
+                               max_new=max_new, temperature=temperature,
+                               top_k=top_k))
+    return rids
+
+
+@pytest.mark.parametrize("kv_quant", [False, True])
+def test_scheduler_mixed_lengths_all_complete(kv_quant):
+    eng = ServeEngine(CFG, PARAMS, slots=3, max_seq=32, kv_quant=kv_quant,
+                      seed=0)
+    rids = _workload(eng, 8)
+    out = eng.run()
+    assert sorted(out) == sorted(rids)            # every request completed
+    assert eng.active_slots == 0 and eng.queued == 0   # no slot leak
+    for c in out.values():
+        assert 1 <= len(c.tokens) <= 5
+        assert c.reason in ("eos", "length")
+        assert all(0 <= t < CFG.vocab_size for t in c.tokens)
+
+
+def test_scheduler_deterministic_and_slot_invariant():
+    outs = []
+    for slots in (2, 4, 4):
+        eng = ServeEngine(CFG, PARAMS, slots=slots, max_seq=32, seed=0)
+        _workload(eng, 6, max_new=4, temperature=0.8, top_k=8)
+        outs.append({r: c.tokens for r, c in eng.run().items()})
+    assert outs[1] == outs[2]                     # same seed => identical
+    # pool-size invariance: the key streams are traffic-independent by
+    # construction; under per-tensor Q_f the logits couple co-resident
+    # slots at quantization-noise level, which this fixed workload does
+    # not push across a sampling decision boundary (deterministic arrays,
+    # so this cannot flake — but it is workload-dependent, not a law)
+    assert outs[0] == outs[1]
+
+
+def test_scheduler_eos_eviction():
+    # learn what greedy emits, then declare the 2nd token EOS: the engine
+    # must evict at that point with reason "eos" instead of burning max_new
+    eng = ServeEngine(CFG, PARAMS, slots=2, max_seq=32, seed=0)
+    prompt = list(range(1, 7))
+    rid = eng.submit(prompt, max_new=8)
+    free_run = eng.run()[rid].tokens
+    assert len(free_run) == 8
+    eos = free_run[2]
+    eng2 = ServeEngine(CFG, PARAMS, slots=2, max_seq=32, eos_id=eos, seed=0)
+    rid2 = eng2.submit(prompt, max_new=8)
+    c = eng2.run()[rid2]
+    assert c.reason == "eos"
+    assert c.tokens == free_run[:3]               # stops at (and keeps) EOS
+    assert eng2.active_slots == 0
+
+
+def test_scheduler_cache_full_evicts_by_length():
+    eng = ServeEngine(CFG, PARAMS, slots=2, max_seq=12, seed=0)
+    rid = eng.submit(list(range(1, 9)), max_new=100)   # 8 prompt + 4 room
+    c = eng.run()[rid]
+    assert c.reason == "length"
+    # capacity: 1 token off the prefill logits + one per free cache row
+    assert len(c.tokens) == (12 - 8) + 1
+    with pytest.raises(ValueError):
+        eng.submit(list(range(20)))               # prompt too long for lane
+
+
+def test_engine_rejects_recurrent_families():
+    rcfg = get_config("rwkv6-1.6b", smoke=True)
+    rmodel = build_model(rcfg)
+    with pytest.raises(ValueError):
+        ServeEngine(rcfg, rmodel.init(jax.random.PRNGKey(0)), slots=2,
+                    max_seq=16)
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint-driven startup
+# ---------------------------------------------------------------------------
+
+def test_serve_from_trainstate_checkpoint(tmp_path):
+    from repro.engine import Engine
+    eng = Engine(CFG, QuantPolicy.qat(), steps=2, batch_size=2, seq_len=8,
+                 ckpt_dir=str(tmp_path), ckpt_every=2, log_fn=None)
+    eng.run()
+    serve = ServeEngine.from_checkpoint(CFG, str(tmp_path), slots=2,
+                                        max_seq=16, kv_quant=True)
+    trained = jax.tree.leaves(eng.state.params)
+    restored = jax.tree.leaves(serve.params)
+    assert all(np.allclose(a, b) for a, b in zip(trained, restored))
+    rid = serve.submit([1, 2, 3], max_new=3)
+    out = serve.run()
+    assert len(out[rid].tokens) == 3
+
+
+def test_serve_from_checkpoint_missing(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        ServeEngine.from_checkpoint(CFG, str(tmp_path / "empty"))
+
+
+# ---------------------------------------------------------------------------
+# Sampling
+# ---------------------------------------------------------------------------
+
+def test_sampling_semantics():
+    key = jax.random.PRNGKey(0)
+    logits = jax.random.normal(key, (4, 32))
+    keys = slot_keys(key, jnp.arange(4, dtype=jnp.int32),
+                     jnp.zeros((4,), jnp.int32))
+    zero = jnp.zeros((4,))
+    # greedy == argmax
+    tok = sample_tokens(logits, keys, zero, jnp.zeros((4,), jnp.int32), 32)
+    assert (np.asarray(tok) == np.asarray(jnp.argmax(logits, -1))).all()
+    # top_k=1 forces greedy even at high temperature
+    tok1 = sample_tokens(logits, keys, jnp.full((4,), 5.0),
+                         jnp.ones((4,), jnp.int32), 32)
+    assert (np.asarray(tok1) == np.asarray(jnp.argmax(logits, -1))).all()
+    # temperature sampling respects the top-k set
+    k = 4
+    topk_sets = np.argsort(-np.asarray(logits), axis=-1)[:, :k]
+    for i in range(50):
+        ks = slot_keys(key, jnp.arange(4, dtype=jnp.int32),
+                       jnp.full((4,), i, jnp.int32))
+        tk = sample_tokens(logits, ks, jnp.full((4,), 1.0),
+                           jnp.full((4,), k, jnp.int32), 32)
+        for row, t in enumerate(np.asarray(tk)):
+            assert t in topk_sets[row]
+
+
+def test_sampling_never_emits_padded_vocab():
+    # padding columns carry huge logits; mask must win for every mode
+    logits = jnp.zeros((2, 16)).at[:, 10:].set(1e9)
+    keys = slot_keys(jax.random.PRNGKey(1), jnp.arange(2, dtype=jnp.int32),
+                     jnp.zeros((2,), jnp.int32))
+    for temp in (0.0, 1.0):
+        tok = sample_tokens(logits, keys, jnp.full((2,), temp),
+                            jnp.zeros((2,), jnp.int32), vocab_size=10)
+        assert (np.asarray(tok) < 10).all()
+
+
+# ---------------------------------------------------------------------------
+# BHQ ragged shapes (the blocking bugfix swept up with this PR)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n,blk", [(37, 16), (129, 64), (5, 16), (48, 16)])
+def test_bhq_ragged_roundtrip_and_unbiased(n, blk):
+    """n % block_rows != 0 must pad (not collapse to one all-n block) and
+    the unpadded rows must stay unbiased, with the exact conditional
+    variance (quantizer_variance) matching Monte-Carlo — the sharp signal
+    that the padding rows are inert (same tolerances as the no-pad
+    48/16 and 5/16 control cases)."""
+    from repro.core import bhq_exact_variance, quantize_bhq_stoch
+    from repro.core.bhq import _blocked_rows
+    x = jax.random.normal(jax.random.PRNGKey(n), (n, 8))
+    gb, valid, n_real = _blocked_rows(x, blk)
+    assert n_real == n
+    assert int(valid.sum()) == n
+    assert gb.shape[1] == min(blk, n)             # sort cost stays bounded
+    qt = quantize_bhq_stoch(x, jax.random.PRNGKey(1), 8, block_rows=blk)
+    assert qt.dequant().shape == (n, 8)
+    ks = jax.random.split(jax.random.PRNGKey(2), 256)
+    samp = jax.lax.map(
+        lambda k: quantize_bhq_stoch(x, k, 4, block_rows=blk).dequant(), ks)
+    scale = float(jnp.max(jnp.abs(x)))
+    bias = jnp.abs(jnp.mean(samp, 0) - x)
+    assert float(jnp.max(bias)) < 0.05 * scale
+    assert float(jnp.mean(bias)) < 0.01 * scale
+    v_emp = float(jnp.sum(jnp.var(samp, axis=0)))
+    v_exact = float(bhq_exact_variance(x, 4, block_rows=blk))
+    assert abs(v_emp - v_exact) < 0.15 * v_exact, (v_emp, v_exact)
+
+
+def test_bhq_ragged_through_fqt_backward():
+    """The dX GEMM consumes the padded BHQTensor — gradient shape and
+    finiteness must survive the unpad slice on every backend."""
+    from repro.core import fqt_matmul
+    x = jax.random.normal(jax.random.PRNGKey(3), (3, 7, 8))   # 21 rows
+    w = jax.random.normal(jax.random.PRNGKey(4), (8, 6))
+    for backend in ("simulate", "native"):
+        pol = QuantPolicy.fqt("bhq", 5, bhq_block=4, backend=backend)
+        dx = jax.grad(lambda a: (fqt_matmul(
+            a, w, jax.random.PRNGKey(5), pol) ** 2).sum())(x)
+        assert dx.shape == x.shape
+        assert bool(jnp.all(jnp.isfinite(dx)))
+
+
+def test_bhq_paper_g_search_reaches_psq_degenerate():
+    """'paper' mode must be able to select G = n (PSQ fallback): constant
+    rows have zero dynamic range, so the exact G = n score (sum R_i^2 = 0)
+    beats every grouped candidate."""
+    from repro.core.bhq import _select_g
+    from repro.core.quantizers import row_dynamic_range
+    mag = jnp.linspace(5.0, 1.0, 8)
+    rows = jnp.broadcast_to(mag[:, None], (8, 16))
+    G = _select_g(jnp.sort(mag)[::-1], row_dynamic_range(rows), 8, "paper")
+    assert int(G) == 8
+    # and plain noise still groups aggressively (the idealized proxy)
+    g = jax.random.normal(jax.random.PRNGKey(6), (8, 16))
+    mag_s = jnp.sort(jnp.max(jnp.abs(g), 1))[::-1]
+    assert int(_select_g(mag_s, row_dynamic_range(g), 8, "paper")) < 8
+
+
+def test_generate_stops_at_eos():
+    from repro.launch.serve import generate
+    toks = make_toks(5)
+    batch = {"tokens": toks}
+    pol = QuantPolicy.qat()
+    free = generate(MODEL, PARAMS, batch, pol, max_new=8, max_seq=T + 9)
+    assert free.shape == (B, 8)
+    eos = int(free[0, 2])
+    stopped = generate(MODEL, PARAMS, batch, pol, max_new=8, max_seq=T + 9,
+                       eos_id=eos)
+    assert stopped.shape[1] <= 8
+    # once a row hits EOS it keeps emitting EOS while the batch drains
+    row = np.asarray(stopped[0])
+    hit = np.where(row == eos)[0]
+    assert hit.size > 0
+    assert (row[hit[0]:] == eos).all()

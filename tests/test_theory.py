@@ -15,7 +15,8 @@ from repro.core import (QuantPolicy, bhq_variance_bound, fqt_matmul,
                         quantize_bhq_stoch, quantize_psq_stoch,
                         quantize_ptq_stoch)
 from repro.core.theory import (empirical_mean_and_variance,
-                               fqt_gradient_stats, theorem2_path_norms)
+                               fqt_gradient_stats, quantizer_variance,
+                               theorem2_path_norms)
 
 
 def sparse_outlier_grad(key, n=128, d=64, outliers=4, ratio=1e3):
@@ -92,6 +93,29 @@ def test_variance_bounds_hold():
         _, v = empirical_mean_and_variance(
             jax.jit(lambda x, k: QUANTS["bhq"](x, k, bits)), g, key, 256)
         assert float(v) <= float(bhq_variance_bound(qt)) * 1.2
+
+
+@pytest.mark.parametrize("quant", list(QUANTS))
+def test_quantizer_variance_exact_matches_empirical(quant):
+    """Proposition 4: quantizer_variance (sum p(1-p) through the transform
+    inverse) equals the Monte-Carlo conditional variance."""
+    g = sparse_outlier_grad(jax.random.PRNGKey(12))
+    kw = {"block_rows": 32} if quant == "bhq" else {}
+    fn = (lambda x, k: quantize_bhq_stoch(x, k, 4, block_rows=32).dequant()) \
+        if quant == "bhq" else (lambda x, k: QUANTS[quant](x, k, 4))
+    _, v_emp = empirical_mean_and_variance(jax.jit(fn), g,
+                                           jax.random.PRNGKey(13), 512)
+    v_exact = float(quantizer_variance(g, quant, 4, **kw))
+    assert v_exact > 0
+    # MC variance of a variance estimate: ~sqrt(2/n) ≈ 6% rel; allow 15%
+    assert abs(float(v_emp) - v_exact) < 0.15 * v_exact, (v_emp, v_exact)
+
+
+def test_quantizer_variance_exported_and_validates():
+    from repro.core import theory
+    assert "quantizer_variance" in theory.__all__
+    with pytest.raises(ValueError):
+        quantizer_variance(jnp.ones((4, 4)), "nope", 4)
 
 
 def test_variance_ordering_bhq_psq_ptq():
