@@ -46,17 +46,23 @@ from typing import Optional, Union
 import jax
 import jax.numpy as jnp
 
+from ..kernels.fused_fqt import (fused_qboth_tn_matmul,
+                                 fused_qboth_tn_matmul_xla,
+                                 fused_qlhs_matmul, fused_qlhs_matmul_xla)
 from ..kernels.q8_matmul import q8_matmul
 from ..kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
 from .bhq import BHQTensor
 from .registry import BACKENDS
-from .quantizers import QTensor
+from .quantizers import QTensor, tensor_min_max
 
 __all__ = [
     "BACKENDS", "resolve_interpret", "affine_factors", "epilogue_coeffs",
     "apply_epilogue", "q8_gemm", "qt_gemm", "qt_gemm_tn", "qt_gemm_nt",
-    "quantize_sr_rows_qt", "quantize_sr_tensor_qt",
+    "quantize_sr_rows_qt", "quantize_sr_tensor_qt", "requantize_det",
+    "fused_fqt_fwd", "fused_fqt_dw", "fused_fqt_dx",
 ]
+
+_EPS = 1e-12        # matches core/quantizers._EPS — one zero-range guard
 
 
 def resolve_interpret(interpret: Optional[bool]) -> bool:
@@ -234,3 +240,133 @@ def quantize_sr_tensor_qt(x2d: jax.Array, key: jax.Array, bits: int,
     c8, scale, zero = quantize_sr_tensor(x2d, rbits, bits,
                                          interpret=resolve_interpret(interpret))
     return QTensor.from_int8(c8, scale, zero, bits, x2d.shape)
+
+
+# ---------------------------------------------------------------------------
+# Fully-fused FQT GEMMs (kernels/fused_fqt.py dispatch)
+#
+# The fused forward never materializes the activation's int8 codes, so its
+# residuals are (x2, scale, zero); the backward *rematerializes* the codes
+# deterministically when it needs them (``requantize_det`` — bit-identical
+# because ptq_det is a pure function of (x, scale, zero)).
+# ---------------------------------------------------------------------------
+
+def _ptq_range(x2: jax.Array, bits: int):
+    """Per-tensor (zero, scale) exactly as ``quantize_ptq_det``/``_stoch``."""
+    B = float((1 << bits) - 1)
+    zero, hi = tensor_min_max(x2)
+    scale = B / jnp.maximum(hi - zero, _EPS)
+    return zero, scale
+
+
+def requantize_det(x2: jax.Array, scale, zero, bits: int) -> QTensor:
+    """Rebuild the deterministic-PTQ QTensor from saved (scale, zero).
+
+    Bit-identical to ``quantize_ptq_det(x2, bits)`` when (scale, zero) came
+    from it — the backward's rematerialization of the fused forward's
+    never-materialized codes (cheaper than re-reducing min/max)."""
+    B = (1 << bits) - 1
+    codes = jnp.clip(jnp.round(scale * (x2 - zero)), 0, B).astype(jnp.uint8)
+    return QTensor(codes=codes, scale=jnp.asarray(scale),
+                   zero=jnp.asarray(zero), bits=bits, shape=x2.shape)
+
+
+def fused_fqt_fwd(x2: jax.Array, wq: QTensor, bits_act: int, *, backend: str,
+                  interpret: Optional[bool] = None):
+    """Forward Eq. 3 ``Q_f(x2) @ W-hat`` with Q_f fused into the K-sweep.
+
+    Returns (y, scale_x, zero_x) — the scale/zero are the residuals the
+    backward uses to rematerialize the activation codes."""
+    M, K = x2.shape
+    zero, scale = _ptq_range(x2, bits_act)
+    sa = jnp.broadcast_to(scale, (M, 1))
+    za = jnp.broadcast_to(zero, (M, 1))
+    w8 = wq.int8_codes.reshape(-1, wq.shape[-1])
+    alpha_b, beta_b = affine_factors(wq.scale, wq.zero, wq.bits)
+    colsum = jnp.sum(w8.astype(jnp.int32), axis=0).astype(jnp.float32)
+    u = alpha_b * colsum + float(K) * beta_b
+    if backend == "pallas":
+        y = fused_qlhs_matmul(x2, sa, za, None, w8, alpha_b, beta_b, u,
+                              bits=bits_act, tune_key="fused_fwd",
+                              interpret=resolve_interpret(interpret))
+    elif backend == "native":
+        y = fused_qlhs_matmul_xla(x2, sa, za, None, w8, alpha_b, beta_b, u,
+                                  bits=bits_act)
+    else:
+        raise ValueError(f"unknown fused backend {backend!r}; "
+                         f"expected one of {BACKENDS[1:]}")
+    return y, scale, zero
+
+
+def fused_fqt_dx(g2: jax.Array, key: jax.Array, spec, wq: QTensor, *,
+                 backend: str, interpret: Optional[bool] = None,
+                 rbits: Optional[jax.Array] = None) -> jax.Array:
+    """Activation-grad GEMM ``Q_b2(g2) @ W-hat.T`` (Eq. 6) with Q_b2 (PTQ
+    per-tensor or PSQ per-row) fused into the K-sweep.
+
+    SR uniforms are the same ``random.bits(key, g2.shape)`` draw the
+    unfused quantizers make for this key, so codes are bit-identical.
+    ``rbits`` lets a caller prefetch that draw (it is a kernel input
+    operand, not part of the quantize->GEMM->epilogue pipeline)."""
+    bits = spec.bits or 8
+    B = float((1 << bits) - 1)
+    M, N = g2.shape
+    if rbits is None:
+        rbits = jax.random.bits(key, g2.shape, jnp.uint32)
+    if spec.name == "psq":
+        zg = jnp.min(g2, axis=-1, keepdims=True)
+        sg = B / jnp.maximum(jnp.max(g2, axis=-1, keepdims=True) - zg, _EPS)
+    else:                                   # per-tensor PTQ
+        zg0, sg0 = _ptq_range(g2, bits)
+        zg = jnp.broadcast_to(zg0, (M, 1))
+        sg = jnp.broadcast_to(sg0, (M, 1))
+    w8 = wq.int8_codes.reshape(-1, wq.shape[-1])          # (Kw, N) storage
+    alpha_b, beta_b = affine_factors(wq.scale, wq.zero, wq.bits)
+    # B-operand is w8.T: its colsum over the contraction (N) is w8's rowsum
+    rowsum = jnp.sum(w8.astype(jnp.int32), axis=1).astype(jnp.float32)
+    u = alpha_b * rowsum + float(N) * beta_b              # (Kw,)
+    if backend == "pallas":
+        return fused_qlhs_matmul(g2, sg, zg, rbits, w8, alpha_b, beta_b, u,
+                                 bits=bits, trans_b=True, tune_key="fused_dx",
+                                 interpret=resolve_interpret(interpret))
+    if backend == "native":
+        return fused_qlhs_matmul_xla(g2, sg, zg, rbits, w8, alpha_b, beta_b,
+                                     u, bits=bits, trans_b=True)
+    raise ValueError(f"unknown fused backend {backend!r}; "
+                     f"expected one of {BACKENDS[1:]}")
+
+
+def fused_fqt_dw(x2: jax.Array, scale_x, zero_x, bits_act: int,
+                 g2: jax.Array, key: jax.Array, bits_wgrad: int, *,
+                 backend: str, interpret: Optional[bool] = None,
+                 rbits: Optional[jax.Array] = None) -> jax.Array:
+    """Weight-grad GEMM ``Q_f(x2).T @ Q_b1(g2)`` (Eq. 6) with both
+    quantizes fused into the K-sweep (deterministic X, stochastic per-tensor
+    dY).  The epilogue's a_i row vector needs a full column sum of X's
+    codes, which the K-sweep never holds — it is rematerialized here as one
+    fused XLA reduce over x2 (no int8 tensor in HBM)."""
+    bits_wgrad = int(bits_wgrad)
+    Bb = float((1 << bits_wgrad) - 1)
+    off_b = 1 << (bits_wgrad - 1)
+    off_a = 1 << (bits_act - 1)
+    Ba = float((1 << bits_act) - 1)
+    zg, hg = tensor_min_max(g2)
+    sg = Bb / jnp.maximum(hg - zg, _EPS)
+    if rbits is None:
+        rbits = jax.random.bits(key, g2.shape, jnp.uint32)
+    ca = jnp.clip(jnp.round(scale_x * (x2 - zero_x)), 0.0, Ba) - off_a
+    alpha_a = 1.0 / scale_x
+    alpha_b = 1.0 / sg
+    beta_b = off_b * alpha_b + zg
+    a_vec = (alpha_a * beta_b) * jnp.sum(ca, axis=0)      # (Kw,)
+    if backend == "pallas":
+        return fused_qboth_tn_matmul(
+            x2, scale_x, zero_x, g2, sg, zg, rbits, a_vec,
+            bits_a=bits_act, bits_b=bits_wgrad, tune_key="fused_dw",
+            interpret=resolve_interpret(interpret))
+    if backend == "native":
+        return fused_qboth_tn_matmul_xla(x2, scale_x, zero_x, g2, sg, zg,
+                                         rbits, a_vec, bits_a=bits_act,
+                                         bits_b=bits_wgrad)
+    raise ValueError(f"unknown fused backend {backend!r}; "
+                     f"expected one of {BACKENDS[1:]}")

@@ -37,7 +37,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .backend import qt_gemm, qt_gemm_nt, qt_gemm_tn
+from .backend import (fused_fqt_dw, fused_fqt_dx, fused_fqt_fwd, qt_gemm,
+                      qt_gemm_nt, qt_gemm_tn, requantize_det)
 from .policy import QuantPolicy
 from .registry import GemmQuantConfig, QuantizerSpec, get_quantizer
 
@@ -46,6 +47,28 @@ __all__ = ["fqt_matmul"]
 
 def _float0_like(x):
     return np.zeros(x.shape, dtype=jax.dtypes.float0)
+
+
+def _fused_roles(cfg: GemmQuantConfig):
+    """(fwd, wgrad, agrad) eligibility for the fused megakernels.
+
+    ``cfg.fused`` is the knob (None = auto: on for the pallas backend); a
+    role only fuses when the fused kernels implement its quantizer — the
+    deterministic-PTQ forward, per-tensor stochastic-PTQ wgrad, PTQ/PSQ
+    agrad.  Everything else (BHQ agrad, custom quantizers) falls back to
+    the unfused per-role path *within the same backward*, and the fused
+    wgrad additionally needs the fused forward's (x, scale, zero) residuals.
+    """
+    if cfg.backend == "simulate" or not cfg.quantize_fwd:
+        return False, False, False
+    on = cfg.fused if cfg.fused is not None else (cfg.backend == "pallas")
+    if not on:
+        return False, False, False
+    fwd = (cfg.fwd_act.name == "ptq_det"
+           and cfg.fwd_weight.name == "ptq_det")
+    wg = fwd and cfg.wgrad is not None and cfg.wgrad.name == "ptq"
+    ag = cfg.agrad is not None and cfg.agrad.name in ("ptq", "psq")
+    return fwd, wg, ag
 
 
 def _quantize_role(spec: QuantizerSpec, x2d: jax.Array, key,
@@ -79,36 +102,66 @@ def _fqt_fwd(cfg: GemmQuantConfig, x, w, key):
     dtype = x.dtype
     # quantizer math in fp32 regardless of activation dtype (bf16 streams)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    xq = _quantize_role(cfg.fwd_act, x2, None, cfg)              # Q_f
     wq = _quantize_role(cfg.fwd_weight, w.astype(jnp.float32), None, cfg)
-    y = qt_gemm(xq, wq, backend=cfg.backend,
-                interpret=cfg.pallas_interpret)
-    return (y.reshape(*lead, w.shape[-1]).astype(dtype),
-            (xq, wq, key, lead))
+    f_fwd, _, _ = _fused_roles(cfg)
+    if f_fwd:
+        # fused path: Q_f happens inside the GEMM's K-sweep — no int8
+        # activation codes in HBM.  Residuals carry (x2, scale, zero); the
+        # backward rematerializes the codes deterministically.
+        y, sx, zx = fused_fqt_fwd(x2, wq, cfg.fwd_act.bits or 8,
+                                  backend=cfg.backend,
+                                  interpret=cfg.pallas_interpret)
+        res = ((x2, sx, zx), wq, key, lead)
+    else:
+        xq = _quantize_role(cfg.fwd_act, x2, None, cfg)          # Q_f
+        y = qt_gemm(xq, wq, backend=cfg.backend,
+                    interpret=cfg.pallas_interpret)
+        res = (xq, wq, key, lead)
+    return y.reshape(*lead, w.shape[-1]).astype(dtype), res
 
 
 def _fqt_bwd(cfg: GemmQuantConfig, res, g):
-    xq, wq, key, lead = res
+    xres, wq, key, lead = res
     dtype = g.dtype          # cotangent dtype == stream dtype (y = x.dtype)
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
+    f_fwd, f_wg, f_ag = _fused_roles(cfg)
+    bits_act = (cfg.fwd_act.bits or 8) if cfg.quantize_fwd else 8
+
+    def xq_remat():
+        # under the fused forward, the activation QTensor was never built —
+        # rebuild it bit-identically from the (x2, scale, zero) residuals
+        if f_fwd:
+            x2, sx, zx = xres
+            return requantize_det(x2, sx, zx, bits_act)
+        return xres
+
     if cfg.wgrad is None and cfg.agrad is None:
         # QAT (Eq. 4): full-precision gradient through quantized operands.
+        xq = xq_remat()
         dw = xq.dequant().T @ g2
         dx = g2 @ wq.dequant().T
     else:
         k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
-        if cfg.wgrad is not None:
-            gq1 = _quantize_role(cfg.wgrad, g2, k1, cfg)         # Q_b1
-            dw = qt_gemm_tn(xq, gq1, backend=cfg.backend,
-                            interpret=cfg.pallas_interpret)
+        if cfg.wgrad is None:
+            dw = xq_remat().dequant().T @ g2
+        elif f_wg:
+            x2, sx, zx = xres
+            dw = fused_fqt_dw(x2, sx, zx, bits_act, g2, k1,
+                              cfg.wgrad.bits or 8, backend=cfg.backend,
+                              interpret=cfg.pallas_interpret)
         else:
-            dw = xq.dequant().T @ g2
-        if cfg.agrad is not None:
+            gq1 = _quantize_role(cfg.wgrad, g2, k1, cfg)         # Q_b1
+            dw = qt_gemm_tn(xq_remat(), gq1, backend=cfg.backend,
+                            interpret=cfg.pallas_interpret)
+        if cfg.agrad is None:
+            dx = g2 @ wq.dequant().T
+        elif f_ag:
+            dx = fused_fqt_dx(g2, k2, cfg.agrad, wq, backend=cfg.backend,
+                              interpret=cfg.pallas_interpret)
+        else:
             gq2 = _quantize_role(cfg.agrad, g2, k2, cfg)         # Q_b2
             dx = qt_gemm_nt(gq2, wq, backend=cfg.backend,
                             interpret=cfg.pallas_interpret)
-        else:
-            dx = g2 @ wq.dequant().T
     dx = dx.reshape(*lead, -1).astype(dtype)   # activation-grad in stream dtype
     return dx, dw, _float0_like(key)           # weight-grad stays fp32 (master)
 

@@ -188,6 +188,7 @@ class QuantPolicy:
     # --- execution backend (core/backend.py dispatch) ---
     backend: str = "simulate"      # "simulate" | "native" | "pallas"
     pallas_interpret: Optional[bool] = None  # None => auto (non-TPU interprets)
+    fused: Optional[bool] = None   # fused megakernels: None => auto (pallas on)
     # --- beyond-paper knobs ---
     compress_dp_grads: bool = False  # int8 unbiased gradient all-reduce
     dp_grad_bits: int = 8
@@ -214,7 +215,8 @@ class QuantPolicy:
         """The global-field defaults as one GemmQuantConfig."""
         if not self.enabled:
             return GemmQuantConfig(backend=self.backend,
-                                   pallas_interpret=self.pallas_interpret)
+                                   pallas_interpret=self.pallas_interpret,
+                                   fused=self.fused)
         wgrad = agrad = None
         if self.quantize_bwd:
             wgrad = QuantizerSpec("ptq", self.wgrad_bits)
@@ -226,7 +228,8 @@ class QuantPolicy:
             fwd_act=QuantizerSpec("ptq_det", self.act_bits),
             fwd_weight=QuantizerSpec("ptq_det", self.weight_bits),
             wgrad=wgrad, agrad=agrad,
-            backend=self.backend, pallas_interpret=self.pallas_interpret)
+            backend=self.backend, pallas_interpret=self.pallas_interpret,
+            fused=self.fused)
 
     def resolve(self, path: str = "") -> GemmQuantConfig:
         """Per-layer role specs for the GEMM at ``path``.

@@ -103,9 +103,39 @@ class QTensor:
                    zero=jnp.asarray(zero), bits=bits, shape=tuple(shape))
 
 
+def opt_barrier(x):
+    """``jax.lax.optimization_barrier`` that degrades to identity under
+    transforms that can't batch it (jax<0.5 has no vmap rule for the
+    primitive).  The barrier only pins a faster XLA schedule — dropping it
+    is always semantically safe."""
+    try:
+        return jax.lax.optimization_barrier(x)
+    except NotImplementedError:
+        return x
+
+
+def tensor_min_max(x: jax.Array):
+    """(min X, max X) in one fused sweep.
+
+    Row-wise paired min/max reductions compile to a single pass over the
+    tensor; the ``optimization_barrier`` stops XLA from re-associating the
+    two-stage reduction back into two independent full-tensor sweeps
+    (measured ~2.3x slower on CPU).  min-of-row-mins is exactly the flat
+    min — no numerical change, only a faster schedule.
+    """
+    if x.ndim < 2:
+        return jnp.min(x), jnp.max(x)
+    r = x.reshape(-1, x.shape[-1])
+    lo = jnp.min(r, axis=-1)
+    hi = jnp.max(r, axis=-1)
+    lo, hi = opt_barrier((lo, hi))
+    return jnp.min(lo), jnp.max(hi)
+
+
 def dynamic_range(x: jax.Array) -> jax.Array:
     """R(X) = max X - min X over the whole tensor (paper Sec. 3.3)."""
-    return jnp.max(x) - jnp.min(x)
+    lo, hi = tensor_min_max(x)
+    return hi - lo
 
 
 def row_dynamic_range(x2d: jax.Array) -> jax.Array:
@@ -151,8 +181,8 @@ def quantize_ptq_det(x: jax.Array, bits: int = 8) -> QTensor:
     requires for the forward pass (Sec. 2.1 assumption).
     """
     B = num_bins(bits)
-    zero = jnp.min(x)
-    scale = B / jnp.maximum(dynamic_range(x), _EPS)
+    zero, hi = tensor_min_max(x)
+    scale = B / jnp.maximum(hi - zero, _EPS)
     codes = jnp.clip(jnp.round(scale * (x - zero)), 0, B).astype(jnp.uint8)
     return QTensor(codes=codes, scale=scale, zero=zero, bits=bits, shape=x.shape)
 
@@ -164,8 +194,8 @@ def quantize_ptq_stoch(x: jax.Array, key: jax.Array, bits: int = 8) -> QTensor:
     Unbiased: E[Q_b(x)] = x. Variance <= N D R(x)^2 / (4 B^2)  (Eq. 9).
     """
     B = num_bins(bits)
-    zero = jnp.min(x)
-    scale = B / jnp.maximum(dynamic_range(x), _EPS)
+    zero, hi = tensor_min_max(x)
+    scale = B / jnp.maximum(hi - zero, _EPS)
     t = scale * (x - zero)                      # in [0, B] by construction
     codes = stochastic_round(t, key)            # SR keeps [0, B]: frac at B is 0
     codes = jnp.clip(codes, 0, B).astype(jnp.uint8)

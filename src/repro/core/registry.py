@@ -155,6 +155,11 @@ class GemmQuantConfig:
     agrad: Optional[QuantizerSpec] = None
     backend: str = "simulate"
     pallas_interpret: Optional[bool] = None
+    # Fused quantize->GEMM->epilogue megakernels (kernels/fused_fqt.py):
+    # None = auto (on for the pallas backend, off otherwise); True/False
+    # force.  Only roles the fused kernels cover actually fuse (ptq_det
+    # forward, ptq wgrad, ptq/psq agrad); the rest fall back per-role.
+    fused: Optional[bool] = None
 
     @property
     def quantize_fwd(self) -> bool:

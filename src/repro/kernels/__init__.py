@@ -1,7 +1,10 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   q8_matmul.py     int8 x int8 -> int32 GEMM + fused affine epilogue
+  fused_fqt.py     quantize -> GEMM -> epilogue megakernels (no HBM codes)
   quantize_sr.py   fused dynamic-range + scale + stochastic-round quantize
+  kv_dequant.py    fused affine dequantize of int8 KV-cache rows
+  autotune.py      tile-shape autotuner + persisted per-shape cache
   ops.py           wrappers wiring kernels to the quantizer algebra
   ref.py           pure-jnp oracles (the allclose targets)
 
@@ -10,7 +13,17 @@ NOTE: ``ops`` is intentionally NOT imported here — it depends on
 import would cycle.  Use ``from repro.kernels.ops import ...``.
 """
 
+from .autotune import (autotune, lookup_tiles, q8_tile_vmem_bytes,
+                       record_tiles, tile_candidates)
+from .fused_fqt import (fused_qboth_tn_matmul, fused_qboth_tn_matmul_xla,
+                        fused_qlhs_matmul, fused_qlhs_matmul_xla)
+from .kv_dequant import kv_dequant_rows
 from .q8_matmul import q8_matmul
 from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
 
-__all__ = ["q8_matmul", "quantize_sr_rows", "quantize_sr_tensor"]
+__all__ = [
+    "q8_matmul", "quantize_sr_rows", "quantize_sr_tensor", "kv_dequant_rows",
+    "fused_qlhs_matmul", "fused_qlhs_matmul_xla", "fused_qboth_tn_matmul",
+    "fused_qboth_tn_matmul_xla", "autotune", "lookup_tiles", "record_tiles",
+    "tile_candidates", "q8_tile_vmem_bytes",
+]

@@ -1,0 +1,292 @@
+"""Tile-shape autotuner with a persisted per-(kernel, shape, backend) cache.
+
+The Pallas GEMM kernels (q8_matmul, fused_fqt) hard-coded one tile shape
+per kernel; the right (bm, bn, bk) depends on the problem shape (how much
+reuse a bigger bn/bk buys vs. the ~16 MB/core VMEM ceiling) and on the
+platform.  This module owns three things:
+
+  * the **VMEM accounting** for every kernel family (``tile_vmem_bytes`` /
+    ``q8_tile_vmem_bytes``), used both to prune candidates and by the bench
+    harness to report the per-tile budget;
+  * the **candidate sweep** (:func:`tile_candidates`): MXU-aligned
+    (bm, bn, bk) triples under the VMEM budget, and :func:`autotune`, which
+    times them through an injectable timer and records the winner;
+  * the **persisted cache**: a JSON file keyed
+    ``<kernel>/<MxKxN>/<dtype>/<platform>`` at ``~/.cache/repro/tuning.json``
+    (override with ``$REPRO_TUNING_CACHE``).  Kernel wrappers consult it at
+    trace time via :func:`lookup_tiles`; a missing or corrupt file falls
+    back to :data:`SHIPPED_DEFAULTS` (pre-tuned entries for the bench
+    shapes) and then to the per-kernel default — never an error.
+
+Re-tune on a new platform/shape with ``python -m benchmarks.bench_kernels
+--tune`` (tile choice only changes performance on TPU, where the Pallas
+kernels compile natively; elsewhere the sweep exercises the plumbing and
+the XLA paths ignore the tiles).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+import warnings
+from typing import Callable, Dict, Iterable, Optional, Tuple
+
+import jax
+
+__all__ = [
+    "DEFAULT_TILES", "SHIPPED_DEFAULTS", "VMEM_BUDGET_BYTES",
+    "tile_vmem_bytes", "q8_tile_vmem_bytes", "tile_candidates",
+    "shape_key", "cache_key", "cache_path", "TuningCache", "get_cache",
+    "reset_cache", "lookup_tiles", "record_tiles", "autotune",
+]
+
+Tiles = Tuple[int, int, int]
+
+DEFAULT_TILES: Tiles = (128, 512, 512)
+
+# Leave ~4 MB of the ~16 MB/core for double-buffered pipelining.
+VMEM_BUDGET_BYTES = 12 * 2 ** 20
+
+ENV_CACHE = "REPRO_TUNING_CACHE"
+_DEFAULT_CACHE_PATH = os.path.join("~", ".cache", "repro", "tuning.json")
+
+# MXU/VPU-aligned sweep axes: bm over the sublane dim (int8 packs 32
+# sublanes; f32 operands need 8), bn/bk over the 128-wide lane dim.
+_BM_CANDIDATES = (32, 64, 128, 256, 512)
+_LANE_CANDIDATES = (128, 256, 512, 1024)
+
+
+# ---------------------------------------------------------------------------
+# VMEM accounting (single source — pruning, bench reporting, docs)
+# ---------------------------------------------------------------------------
+
+def tile_vmem_bytes(bm: int, bn: int, bk: int, kind: str = "q8") -> int:
+    """Resident VMEM bytes for one grid step of a kernel family.
+
+    ``q8``         int8 A + int8 B + f32 out + int32 acc + epilogue vectors
+    ``fused_lhs``  f32 A tile + uint32 SR bits + int8 B + out/acc + rowsum
+                   scratch + epilogue vectors (quantize-on-the-fly LHS)
+    ``fused_tn``   f32 A + f32 B + uint32 bits + out/acc + colsum scratch
+                   (both operands quantized on the fly; dW kernel)
+    """
+    vecs = 4 * (2 * bm + 3 * bn)            # scale/zero rows + cs/u/b cols
+    out_acc = 4 * bm * bn + 4 * bm * bn     # f32 out block + int32 acc
+    if kind == "q8":
+        return bm * bk + bk * bn + out_acc + vecs
+    if kind == "fused_lhs":
+        return (4 * bm * bk + 4 * bm * bk + bk * bn
+                + out_acc + 4 * bm + vecs)
+    if kind == "fused_tn":
+        return (4 * bk * bm + 4 * bk * bn + 4 * bk * bn
+                + out_acc + 4 * bn + vecs)
+    raise ValueError(f"unknown kernel kind {kind!r}; "
+                     f"expected one of ('q8', 'fused_lhs', 'fused_tn')")
+
+
+def q8_tile_vmem_bytes(bm: int, bn: int, bk: int, fused: bool = False) -> int:
+    """The historical bench entry point (``kernel/q8_tile_vmem_bytes``)."""
+    return tile_vmem_bytes(bm, bn, bk, "fused_lhs" if fused else "q8")
+
+
+def tile_candidates(m: int, k: int, n: int, kind: str = "q8",
+                    budget: int = VMEM_BUDGET_BYTES) -> Tuple[Tiles, ...]:
+    """MXU-aligned (bm, bn, bk) triples under the VMEM budget, no larger
+    than the (rounded-up) problem dims — the autotuner's sweep space."""
+    from .tiling import round_up
+    out = []
+    for bm in _BM_CANDIDATES:
+        if bm > round_up(m, 32):
+            continue
+        for bn in _LANE_CANDIDATES:
+            if bn > round_up(n, 128):
+                continue
+            for bk in _LANE_CANDIDATES:
+                if bk > round_up(k, 128):
+                    continue
+                if tile_vmem_bytes(bm, bn, bk, kind) <= budget:
+                    out.append((bm, bn, bk))
+    return tuple(out) or (DEFAULT_TILES,)
+
+
+# ---------------------------------------------------------------------------
+# The persisted cache
+# ---------------------------------------------------------------------------
+
+def shape_key(*dims) -> str:
+    # string dims name shape-agnostic entries (e.g. kv_dequant's "rows")
+    return "x".join(d if isinstance(d, str) else str(int(d)) for d in dims)
+
+
+def cache_key(kernel: str, shape, dtype: str = "int8",
+              platform: Optional[str] = None) -> str:
+    if platform is None:
+        platform = jax.default_backend()
+    return f"{kernel}/{shape_key(*shape)}/{dtype}/{platform}"
+
+
+def cache_path() -> str:
+    return os.path.expanduser(os.environ.get(ENV_CACHE)
+                              or _DEFAULT_CACHE_PATH)
+
+
+# Pre-tuned winners for the bench shapes (keys are platform-agnostic — they
+# apply when the persisted cache has no platform-specific entry).  Chosen by
+# VMEM/arithmetic-intensity analysis for the TPU target: the largest
+# lane-aligned bn*bk under the budget, bm sized so the int8 A tile keeps the
+# MXU fed without starving double-buffering.
+SHIPPED_DEFAULTS: Dict[str, Tiles] = {
+    "q8_matmul/512x1024x1024": (256, 512, 1024),
+    "q8_matmul/1024x4096x1024": (256, 512, 1024),
+    "q8_matmul/4096x1024x4096": (256, 1024, 512),
+    "fused_fwd/512x1024x1024": (128, 512, 512),
+    "fused_fwd/1024x4096x1024": (128, 512, 512),
+    "fused_fwd/4096x1024x4096": (128, 1024, 512),
+    # dx/dw keys are the GEMM-logical (M, K, N) the wrappers look up —
+    # for a model GEMM (m, k, n): dx contracts n -> (m, n, k); dw contracts
+    # m -> (k, m, n)
+    "fused_dx/512x1024x1024": (128, 512, 512),
+    "fused_dx/1024x1024x4096": (128, 512, 512),
+    "fused_dx/4096x4096x1024": (128, 1024, 512),
+    "fused_dw/1024x512x1024": (128, 512, 256),
+    "fused_dw/4096x1024x1024": (128, 512, 256),
+    "fused_dw/1024x4096x4096": (128, 512, 256),
+    "kv_dequant/rows": (256, 0, 0),
+}
+
+
+class TuningCache:
+    """Lazy-loaded JSON tile cache; corrupt or unreadable files degrade to
+    an empty cache with a one-time warning (never an exception)."""
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path or cache_path()
+        self._data: Optional[dict] = None
+
+    def _load(self) -> dict:
+        if self._data is not None:
+            return self._data
+        data: dict = {}
+        if os.path.exists(self.path):
+            try:
+                with open(self.path) as f:
+                    raw = json.load(f)
+                if not isinstance(raw, dict):
+                    raise ValueError(f"expected a JSON object, got "
+                                     f"{type(raw).__name__}")
+                data = raw
+            except (ValueError, OSError) as e:
+                warnings.warn(
+                    f"ignoring corrupt tuning cache {self.path!r} ({e}); "
+                    f"falling back to shipped defaults — re-tune with "
+                    f"`python -m benchmarks.bench_kernels --tune`",
+                    stacklevel=2)
+        self._data = data
+        return data
+
+    def lookup(self, key: str) -> Optional[Tiles]:
+        entry = self._load().get(key)
+        if not isinstance(entry, dict):
+            return None
+        try:
+            return (int(entry["bm"]), int(entry["bn"]), int(entry["bk"]))
+        except (KeyError, TypeError, ValueError):
+            return None
+
+    def record(self, key: str, tiles: Tiles,
+               us_per_call: Optional[float] = None) -> None:
+        bm, bn, bk = tiles
+        entry = {"bm": int(bm), "bn": int(bn), "bk": int(bk)}
+        if us_per_call is not None:
+            entry["us_per_call"] = float(us_per_call)
+        self._load()[key] = entry
+
+    def save(self) -> str:
+        """Atomic write (tmp + rename) so a killed tune never corrupts."""
+        data = self._load()
+        d = os.path.dirname(self.path) or "."
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(data, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        finally:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+        return self.path
+
+
+_CACHE: Optional[TuningCache] = None
+
+
+def get_cache() -> TuningCache:
+    global _CACHE
+    if _CACHE is None or _CACHE.path != cache_path():
+        # re-resolve when $REPRO_TUNING_CACHE changes (tests use tmpdirs)
+        _CACHE = TuningCache()
+    return _CACHE
+
+
+def reset_cache() -> None:
+    global _CACHE
+    _CACHE = None
+
+
+def lookup_tiles(kernel: str, shape, default: Tiles = DEFAULT_TILES,
+                 dtype: str = "int8") -> Tiles:
+    """Trace-time tile resolution: persisted cache (platform-specific wins
+    over platform-agnostic ``any``) > shipped defaults > ``default``."""
+    cache = get_cache()
+    for platform in (jax.default_backend(), "any"):
+        hit = cache.lookup(cache_key(kernel, shape, dtype, platform))
+        if hit is not None:
+            return hit
+    return SHIPPED_DEFAULTS.get(f"{kernel}/{shape_key(*shape)}", default)
+
+
+def record_tiles(kernel: str, shape, tiles: Tiles,
+                 us_per_call: Optional[float] = None, dtype: str = "int8",
+                 platform: Optional[str] = None, save: bool = True) -> str:
+    cache = get_cache()
+    key = cache_key(kernel, shape, dtype, platform)
+    cache.record(key, tiles, us_per_call)
+    if save:
+        cache.save()
+    return key
+
+
+def autotune(kernel: str, shape, run_us: Callable[[Tiles], float], *,
+             candidates: Optional[Iterable[Tiles]] = None,
+             dtype: str = "int8", save: bool = True,
+             log: Optional[Callable[[str], None]] = None) -> Tiles:
+    """Sweep ``candidates`` through ``run_us`` (a timer returning µs/call),
+    persist the winner, and return it.
+
+    ``run_us`` is injectable so unit tests drive the sweep with a fake
+    timer; the bench harness passes a real ``time_us`` closure.  A candidate
+    that raises is skipped (bad tile configs surfaced by the sweep are the
+    wrappers' job to reject with a clear ValueError).
+    """
+    if candidates is None:
+        m, k, n = shape
+        candidates = tile_candidates(m, k, n)
+    best: Optional[Tiles] = None
+    best_us = float("inf")
+    for tiles in candidates:
+        try:
+            us = float(run_us(tiles))
+        except Exception as e:  # noqa: BLE001 — sweep must survive bad tiles
+            if log:
+                log(f"  {kernel}{tiles}: skipped ({type(e).__name__}: {e})")
+            continue
+        if log:
+            log(f"  {kernel}{tiles}: {us:.1f} us")
+        if us < best_us:
+            best, best_us = tiles, us
+    if best is None:
+        raise ValueError(
+            f"autotune({kernel!r}, {tuple(shape)}): every candidate failed; "
+            f"check the kernel wrapper's tile validation")
+    record_tiles(kernel, shape, best, best_us, dtype=dtype, save=save)
+    return best

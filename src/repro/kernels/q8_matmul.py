@@ -29,7 +29,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
-from .tiling import pad2d as _pad2, round_up as _round_up
+from .autotune import lookup_tiles
+from .tiling import (check_tiles, pad2d as _pad2, round_up as _round_up)
 
 __all__ = ["q8_matmul"]
 
@@ -52,25 +53,41 @@ def _kernel(x_ref, y_ref, rs_ref, cs_ref, r2_ref, u_ref, a_ref, b_ref,
                       + a_ref[...] + b_ref[...])
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
 def q8_matmul(x8: jax.Array, y8: jax.Array, rs: jax.Array, cs: jax.Array,
               r2: jax.Array, u: jax.Array, a: jax.Array, b: jax.Array,
-              bm: int = 128, bn: int = 512, bk: int = 512,
+              bm: int = None, bn: int = None, bk: int = None,
               interpret: bool = False) -> jax.Array:
     """x8: (M,K) int8; y8: (K,N) int8; rs/r2/a: (M,); cs/u/b: (N,) -> f32.
 
-    Arbitrary (M, N, K) work: tiles shrink toward small dims (keeping
-    MXU-friendly multiples), then every dim is zero-padded up to a tile
-    multiple and the result sliced back.  Zero-padding is exact — padded K
-    codes contribute 0 to the accumulator and the epilogue coefficient
-    vectors pad with zeros, so padded output rows/cols never leak.
+    Tiles default to the persisted autotuner cache for this (M, K, N)
+    (``kernels/autotune.py``; explicit bm/bn/bk override it), shrink toward
+    small dims (keeping MXU-friendly multiples), then every dim is
+    zero-padded up to a tile multiple and the result sliced back.
+    Zero-padding is exact — padded K codes contribute 0 to the accumulator
+    and the epilogue coefficient vectors pad with zeros, so padded output
+    rows/cols never leak.
     """
     M, K = x8.shape
     K2, N = y8.shape
-    assert K == K2
+    if K != K2:
+        raise ValueError(f"q8_matmul: contraction mismatch — x8 {x8.shape} "
+                         f"vs y8 {y8.shape}")
+    tm, tn, tk = lookup_tiles("q8_matmul", (M, K, N))
+    bm, bn, bk = (tm if bm is None else bm, tn if bn is None else bn,
+                  tk if bk is None else bk)
     bm = min(bm, _round_up(M, 32))       # int8 sublane tile is 32
     bn = min(bn, _round_up(N, 128))      # lane dim is 128
     bk = min(bk, _round_up(K, 128))
+    check_tiles("q8_matmul", (M, K, N), (bm, bn, bk), interpret=interpret,
+                multiples=(32, 128, 128))
+    return _q8_matmul(x8, y8, rs, cs, r2, u, a, b, bm=bm, bn=bn, bk=bk,
+                      interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def _q8_matmul(x8, y8, rs, cs, r2, u, a, b, *, bm, bn, bk, interpret):
+    M, K = x8.shape
+    N = y8.shape[1]
     Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
     x8 = _pad2(x8, Mp, Kp)
     y8 = _pad2(y8, Kp, Np)
