@@ -288,7 +288,8 @@ def tune(shapes=None, iters: int = 3, log=print):
         zv_m = jnp.zeros((m,), jnp.float32)
         zv_n = jnp.zeros((n,), jnp.float32)
 
-        def q8_run(tiles):
+        def q8_run(tiles, *, x8=x8, y8=y8, rs=rs, cs=cs, zv_m=zv_m,
+                   zv_n=zv_n):
             bm, bn, bk = tiles
             return min_time_us(
                 lambda: q8_matmul(x8, y8, rs, cs, zv_m, zv_n, zv_m, zv_n,
@@ -304,7 +305,7 @@ def tune(shapes=None, iters: int = 3, log=print):
         za = jnp.full((m, 1), -1.0, jnp.float32)
         u = jnp.zeros((n,), jnp.float32)
 
-        def fused_run(tiles):
+        def fused_run(tiles, *, xf=xf, sa=sa, za=za, y8=y8, u=u):
             bm, bn, bk = tiles
             return min_time_us(
                 lambda: fused_qlhs_matmul(xf, sa, za, None, y8, 0.01, 0.5,

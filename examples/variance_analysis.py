@@ -30,7 +30,7 @@ def main():
         print(f"{'bits':>5} | " + " | ".join(f"{q:>12}" for q in quants))
         for bits in (8, 6, 5, 4, 3):
             vals = []
-            for q, fn in quants.items():
+            for fn in quants.values():
                 f = jax.jit(lambda x, k, b=bits, fq=fn: fq(x, k, b))
                 _, var = empirical_mean_and_variance(
                     f, g, jax.random.PRNGKey(bits), n_samples=128)

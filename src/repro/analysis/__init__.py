@@ -1,0 +1,46 @@
+"""``repro.analysis`` — static verification of the quantization contract.
+
+The quantization layer (core/fqt.py + core/policy.py) promises "every
+linear-layer GEMM runs under the resolved policy; everything else is
+declared full-precision".  Nothing at runtime *checks* that promise: a
+layer that silently calls ``jnp.dot`` trains fine, converges fine, and
+reports FQT numbers that are quietly part-fp32.  This package closes the
+loop without touching a device:
+
+  ``audit``    (:mod:`.audit`)  trace to jaxpr, attribute every GEMM via
+               the ``q[path|role]``/``qfp``/``fp`` name-stack markers, and
+               diff against ``QuantPolicy.resolve`` + the ``fp_exempt``
+               registry; FLOP-weighted coverage; mutation self-test.
+  ``ranges``   (:mod:`.ranges`)  int32-accumulator overflow bounds for
+               intN x intN GEMMs, scale-degeneracy checks.
+  ``kernels``  (:mod:`.kernels`) static validation of every Pallas tile
+               choice (shipped + persisted tuning cache).
+  ``tracing``  (:mod:`.tracing`) retrace counter + donation verifier for
+               the jitted engine step.
+  ``lint``     (:mod:`.lint`)    AST rules RPR001-003 over layers/models.
+
+CLI: ``python -m repro.analysis {audit|lint|kernels}`` (see __main__.py);
+exits non-zero on any violation, so CI gates on it.
+"""
+
+from .audit import (AuditReport, SelftestResult, Violation, audit_fn,
+                    audit_model, audit_step, mutation_selftest)
+from .graph import GemmSite, iter_gemm_sites, site_flops
+from .kernels import KernelCheckReport, KernelFinding, check_kernels
+from .lint import LintFinding, lint_file, lint_source, lint_tree
+from .ranges import (RangeFinding, accumulator_bound, check_sites,
+                     headroom_bits, max_safe_k, signed_code_bound)
+from .tracing import (DonationReport, RetraceGuard, check_donation,
+                      check_step_donation)
+
+__all__ = [
+    "AuditReport", "Violation", "SelftestResult",
+    "audit_fn", "audit_model", "audit_step", "mutation_selftest",
+    "GemmSite", "iter_gemm_sites", "site_flops",
+    "RangeFinding", "check_sites", "accumulator_bound", "max_safe_k",
+    "headroom_bits", "signed_code_bound",
+    "KernelCheckReport", "KernelFinding", "check_kernels",
+    "LintFinding", "lint_source", "lint_file", "lint_tree",
+    "RetraceGuard", "DonationReport", "check_donation",
+    "check_step_donation",
+]

@@ -1,0 +1,135 @@
+"""CLI: ``python -m repro.analysis {audit|lint|kernels}``.
+
+Exit status is the contract: 0 = clean, 1 = violations — CI gates on it
+(.github/workflows/ci.yml ``analysis`` job).  Everything runs on CPU at
+trace time; no accelerator, no parameter materialization.
+
+  audit    jaxpr-level quantization-contract audit of one or more configs
+           under a policy; ``--selftest`` additionally runs the mutation
+           self-test (a deliberately leaked GEMM must turn the audit red);
+           ``--step`` audits the full engine step instead of loss+grad.
+  lint     AST rules RPR001-003 over src/repro/{layers,models}.
+  kernels  static tile validation (shipped defaults + persisted tuning
+           cache); ``--purge`` removes bad/stale persisted entries.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def _build_policy(name: str, backend: str):
+    from ..core import QuantPolicy
+    factories = {
+        "exact": lambda: QuantPolicy.exact(),
+        "qat": lambda: QuantPolicy.qat(backend=backend),
+        "fqt8": lambda: QuantPolicy.fqt("bhq", 8, backend=backend),
+        "fqt4": lambda: QuantPolicy.fqt("bhq", 4, backend=backend),
+        "fqt2": lambda: QuantPolicy.fqt("bhq", 2, backend=backend),
+    }
+    if name not in factories:
+        raise SystemExit(f"unknown policy {name!r}; "
+                         f"choose from {sorted(factories)}")
+    return factories[name]()
+
+
+def _cmd_audit(ns) -> int:
+    from ..configs import ALL_NAMES, get_config
+    from .audit import audit_model, audit_step, mutation_selftest
+
+    configs = ns.config or ["statquant-tx", "whisper-medium"]
+    bad = [c for c in configs if c not in ALL_NAMES]
+    if bad:
+        raise SystemExit(f"unknown config(s) {bad}; choose from {ALL_NAMES}")
+    policy = _build_policy(ns.policy, ns.backend)
+    rc = 0
+    for name in configs:
+        cfg = get_config(name, smoke=not ns.full_size)
+        if ns.step:
+            report = audit_step(cfg, policy)
+        else:
+            report = audit_model(cfg, policy, grad=not ns.fwd_only)
+        print(report.format(verbose=ns.verbose))
+        print()
+        if not report.ok:
+            rc = 1
+        if ns.selftest:
+            result = mutation_selftest(cfg, policy)
+            print(f"== mutation self-test: {name} ==")
+            print(result.detail)
+            if not result.ok:
+                print(result.mutated.format())
+                rc = 1
+            print()
+    return rc
+
+
+def _cmd_lint(ns) -> int:
+    from .lint import lint_tree
+
+    findings = lint_tree(ns.root or None)
+    for f in findings:
+        print(f)
+    n = len(findings)
+    print(f"lint: {n} finding(s)" if n else "lint: OK")
+    return 1 if findings else 0
+
+
+def _cmd_kernels(ns) -> int:
+    from .kernels import check_kernels, purge_bad_entries
+
+    report = check_kernels(ns.cache)
+    print(report.format(verbose=ns.verbose))
+    if ns.purge:
+        n = purge_bad_entries(report)
+        print(f"purged {n} bad/stale cache entr{'y' if n == 1 else 'ies'}")
+    return 0 if report.ok else 1
+
+
+def main(argv=None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="Static analysis of the quantization contract.")
+    sub = parser.add_subparsers(dest="cmd", required=True)
+
+    p = sub.add_parser("audit", help="jaxpr quantization-contract audit")
+    p.add_argument("--config", action="append",
+                   help="arch config name (repeatable; default: the two "
+                        "smoke configs statquant-tx + whisper-medium)")
+    p.add_argument("--policy", default="fqt8",
+                   choices=["exact", "qat", "fqt8", "fqt4", "fqt2"])
+    p.add_argument("--backend", default="simulate",
+                   choices=["simulate", "native", "pallas"])
+    p.add_argument("--selftest", action="store_true",
+                   help="also run the mutation self-test")
+    p.add_argument("--step", action="store_true",
+                   help="audit the full engine step (loss+grad+optimizer)")
+    p.add_argument("--fwd-only", action="store_true",
+                   help="trace the forward only (no gradient contract)")
+    p.add_argument("--full-size", action="store_true",
+                   help="use the full config instead of its smoke variant")
+    p.add_argument("-v", "--verbose", action="store_true")
+    p.set_defaults(fn=_cmd_audit)
+
+    p = sub.add_parser("lint", help="AST contract rules RPR001-003")
+    p.add_argument("--root", action="append",
+                   help="directory to lint (repeatable; default: "
+                        "src/repro/layers + src/repro/models)")
+    p.set_defaults(fn=_cmd_lint)
+
+    p = sub.add_parser("kernels", help="static Pallas tile validation")
+    p.add_argument("--cache", default=None,
+                   help="tuning-cache path (default: $REPRO_TUNING_CACHE "
+                        "or ~/.cache/repro/tuning.json)")
+    p.add_argument("--purge", action="store_true",
+                   help="remove bad/stale persisted entries")
+    p.add_argument("-v", "--verbose", action="store_true")
+    p.set_defaults(fn=_cmd_kernels)
+
+    ns = parser.parse_args(argv)
+    return ns.fn(ns)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,175 @@
+"""Retrace and buffer-donation guards for the jitted training step.
+
+Two silent performance regressions this module turns into assertions:
+
+  * **Recompilation**: a step function that retraces every call (a Python
+    scalar in the carry, an unhashable static arg, a fresh closure per
+    step) still *works* — it just burns minutes of XLA compile time per
+    step.  :class:`RetraceGuard` counts compilation-cache misses across a
+    window of calls and fails if any call after the first compiles.
+
+  * **Donation**: ``jit_step`` donates the TrainState (engine/step.py,
+    ``donate_argnums=(0,)``) so the optimizer update reuses the parameter
+    buffers instead of doubling peak HBM.  Donation silently degrades to a
+    copy when shardings mismatch or a donated buffer is still referenced.
+    :func:`check_donation` verifies the donated inputs were actually
+    consumed (``is_deleted`` — true on every backend when donation took)
+    and, where the platform exposes stable device pointers, that outputs
+    alias the donated storage.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, List, Optional, Tuple
+
+import jax
+
+__all__ = ["RetraceGuard", "DonationReport", "check_donation",
+           "check_step_donation"]
+
+
+def _cache_size(fn) -> Optional[int]:
+    """Compilation-cache size of a jitted callable, or None when the JAX
+    version does not expose it."""
+    getter = getattr(fn, "_cache_size", None)
+    if getter is None:
+        return None
+    try:
+        return int(getter())
+    except Exception:
+        return None
+
+
+@dataclasses.dataclass
+class RetraceGuard:
+    """Wrap a jitted callable and count compilation-cache misses.
+
+    >>> step = jit_step(make_step_fn(...))
+    >>> guard = RetraceGuard(step)
+    >>> state, metrics = guard(state, batch)     # compiles (expected)
+    >>> state, metrics = guard(state, batch)     # must hit the cache
+    >>> guard.assert_no_retrace()
+
+    ``compiles`` records the call indices that missed the cache.  The
+    first call compiling is expected; any later miss means something in
+    the call signature churns (dtype/shape drift between steps, a Python
+    object in the carry, a re-wrapped closure).
+    """
+
+    fn: Callable
+    calls: int = 0
+    compiles: List[int] = dataclasses.field(default_factory=list)
+    _supported: bool = dataclasses.field(default=True, repr=False)
+
+    def __call__(self, *args, **kwargs):
+        before = _cache_size(self.fn)
+        out = self.fn(*args, **kwargs)
+        after = _cache_size(self.fn)
+        if before is None or after is None:
+            self._supported = False
+        elif after > before:
+            self.compiles.append(self.calls)
+        self.calls += 1
+        return out
+
+    @property
+    def retraces(self) -> int:
+        """Compilations beyond the expected first-call trace."""
+        return sum(1 for i in self.compiles if i > 0)
+
+    def assert_no_retrace(self) -> None:
+        if not self._supported:
+            return                      # cannot observe: do not fail falsely
+        if self.retraces:
+            raise AssertionError(
+                f"jitted step retraced on call(s) "
+                f"{[i for i in self.compiles if i > 0]} of {self.calls} "
+                f"(cache misses at {self.compiles}); something in the call "
+                f"signature churns between steps — a Python scalar in the "
+                f"carry, shape/dtype drift, or a fresh closure per call")
+
+
+# ---------------------------------------------------------------------------
+# Donation
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DonationReport:
+    n_donated: int
+    n_deleted: int
+    aliased: Optional[bool]             # None when pointers are unobservable
+    detail: str
+
+    @property
+    def ok(self) -> bool:
+        return self.n_deleted == self.n_donated and self.aliased is not False
+
+
+def _buffer_ptrs(tree) -> List[int]:
+    ptrs = []
+    for leaf in jax.tree.leaves(tree):
+        try:
+            ptrs.append(leaf.unsafe_buffer_pointer())
+        except Exception:
+            return []                   # backend does not expose pointers
+    return ptrs
+
+
+def check_donation(fn: Callable, donate_tree, *rest,
+                   out_index: int = 0) -> Tuple[Any, DonationReport]:
+    """Call ``fn(donate_tree, *rest)`` and verify the donation contract.
+
+    ``fn`` must donate its first argument (``jit_step`` does).  Checks:
+
+      1. every array leaf of ``donate_tree`` is deleted after the call —
+         JAX invalidates donated buffers on every backend, so a live input
+         means the donation was dropped (with an XLA warning nobody reads);
+      2. where the backend exposes ``unsafe_buffer_pointer`` (TPU/GPU),
+         the output at ``out_index`` (the new state) reuses at least one
+         donated pointer — actual aliasing, not just invalidation.  On
+         backends without stable pointers ``aliased`` is None (unchecked).
+
+    Returns ``(fn's result, DonationReport)``.  The input tree is consumed.
+    """
+    leaves_in = [x for x in jax.tree.leaves(donate_tree)
+                 if isinstance(x, jax.Array)]
+    ptrs_in = set(_buffer_ptrs(leaves_in))
+    out = fn(donate_tree, *rest)
+
+    n_deleted = 0
+    for leaf in leaves_in:
+        try:
+            deleted = leaf.is_deleted()
+        except Exception:
+            deleted = False
+        n_deleted += bool(deleted)
+
+    aliased: Optional[bool] = None
+    if ptrs_in:
+        new_state = out[out_index] if isinstance(out, (tuple, list)) else out
+        ptrs_out = set(_buffer_ptrs(
+            [x for x in jax.tree.leaves(new_state)
+             if isinstance(x, jax.Array)]))
+        if ptrs_out:
+            aliased = bool(ptrs_in & ptrs_out)
+
+    n = len(leaves_in)
+    if n_deleted == n:
+        detail = (f"all {n} donated buffers consumed"
+                  + ("" if aliased is None else
+                     f"; output {'aliases' if aliased else 'does NOT alias'}"
+                     f" donated storage"))
+    else:
+        detail = (f"only {n_deleted}/{n} donated buffers deleted — donation "
+                  f"was dropped (sharding mismatch or a live reference held "
+                  f"across the call); peak HBM doubles")
+    return out, DonationReport(n_donated=n, n_deleted=n_deleted,
+                               aliased=aliased, detail=detail)
+
+
+def check_step_donation(step_fn, state, batch) -> DonationReport:
+    """Donation check specialized to the engine step signature
+    ``step_fn(state, batch) -> (new_state, metrics)``."""
+    (_, _), report = check_donation(step_fn, state, batch, out_index=0)
+    return report

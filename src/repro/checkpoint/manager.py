@@ -129,7 +129,7 @@ class CheckpointManager:
         s_leaves = (jax.tree_util.tree_flatten(shardings)[0]
                     if shardings is not None else [None] * len(t_leaves))
         out = []
-        for (tpath, tleaf), sh in zip(t_leaves, s_leaves):
+        for (tpath, tleaf), sh in zip(t_leaves, s_leaves, strict=True):
             key = _SEP.join(str(getattr(k, "key", getattr(k, "idx", k)))
                             for k in tpath)
             if key not in flat:

@@ -8,6 +8,8 @@ from .bhq import (BHQTensor, bhq_exact_variance, bhq_variance_bound,
                   quantize_bhq_stoch)
 from .compression import (compressed_grad_allreduce, compressed_psum,
                           compression_variance_bound)
+from .exempt import (clear_exemptions, exemption_registry, fp_exempt,
+                     quant_scope)
 from .fqt import fqt_matmul
 from .kv_cache import (dequant_kv_rows, kv_cache_bytes_per_row,
                        quantize_kv_rows)
@@ -28,6 +30,8 @@ __all__ = [
     "ROLES", "KV_CACHE_ROLE", "QuantizerSpec", "GemmQuantConfig", "Quantizer",
     "register_quantizer", "get_quantizer", "available_quantizers",
     "resolve_kv_cache_spec",
+    # exemption registry + jaxpr markers (core/exempt.py, repro.analysis)
+    "fp_exempt", "quant_scope", "exemption_registry", "clear_exemptions",
     "fqt_matmul", "num_bins", "dynamic_range", "row_dynamic_range",
     "sr_uniform", "stochastic_round", "quantize_ptq_det",
     "quantize_ptq_stoch", "quantize_psq_stoch", "quantize_bhq_stoch",

@@ -126,7 +126,7 @@ def compressed_grad_allreduce(grads, mesh, axis_name: str, key: jax.Array,
 
     leaves, treedef = jax.tree.flatten(grads)
     keys = jax.random.split(key, len(leaves))
-    out = [per_leaf(i, g, k) for i, (g, k) in enumerate(zip(leaves, keys))]
+    out = [per_leaf(i, g, k) for i, (g, k) in enumerate(zip(leaves, keys, strict=True))]
     return jax.tree.unflatten(treedef, out)
 
 

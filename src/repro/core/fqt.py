@@ -39,6 +39,7 @@ import numpy as np
 
 from .backend import (fused_fqt_dw, fused_fqt_dx, fused_fqt_fwd, qt_gemm,
                       qt_gemm_nt, qt_gemm_tn, requantize_det)
+from .exempt import quant_scope
 from .policy import QuantPolicy
 from .registry import GemmQuantConfig, QuantizerSpec, get_quantizer
 
@@ -91,36 +92,40 @@ def _quantize_role(spec: QuantizerSpec, x2d: jax.Array, key,
 # The custom_vjp primitive
 # ---------------------------------------------------------------------------
 
-@partial(jax.custom_vjp, nondiff_argnums=(0,))
-def _fqt(cfg: GemmQuantConfig, x: jax.Array, w: jax.Array, key: jax.Array):
-    y, _ = _fqt_fwd(cfg, x, w, key)
+@partial(jax.custom_vjp, nondiff_argnums=(0, 1))
+def _fqt(cfg: GemmQuantConfig, path: str, x: jax.Array, w: jax.Array,
+         key: jax.Array):
+    y, _ = _fqt_fwd(cfg, path, x, w, key)
     return y
 
 
-def _fqt_fwd(cfg: GemmQuantConfig, x, w, key):
+def _fqt_fwd(cfg: GemmQuantConfig, path: str, x, w, key):
     lead = x.shape[:-1]
     dtype = x.dtype
     # quantizer math in fp32 regardless of activation dtype (bf16 streams)
     x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
-    wq = _quantize_role(cfg.fwd_weight, w.astype(jnp.float32), None, cfg)
-    f_fwd, _, _ = _fused_roles(cfg)
-    if f_fwd:
-        # fused path: Q_f happens inside the GEMM's K-sweep — no int8
-        # activation codes in HBM.  Residuals carry (x2, scale, zero); the
-        # backward rematerializes the codes deterministically.
-        y, sx, zx = fused_fqt_fwd(x2, wq, cfg.fwd_act.bits or 8,
-                                  backend=cfg.backend,
-                                  interpret=cfg.pallas_interpret)
-        res = ((x2, sx, zx), wq, key, lead)
-    else:
-        xq = _quantize_role(cfg.fwd_act, x2, None, cfg)          # Q_f
-        y = qt_gemm(xq, wq, backend=cfg.backend,
-                    interpret=cfg.pallas_interpret)
-        res = (xq, wq, key, lead)
+    # the q[path|fwd] marker scopes the whole quantize+GEMM so the jaxpr
+    # auditor (repro.analysis) attributes every fwd equation to this layer
+    with quant_scope(path, "fwd", True):
+        wq = _quantize_role(cfg.fwd_weight, w.astype(jnp.float32), None, cfg)
+        f_fwd, _, _ = _fused_roles(cfg)
+        if f_fwd:
+            # fused path: Q_f happens inside the GEMM's K-sweep — no int8
+            # activation codes in HBM.  Residuals carry (x2, scale, zero);
+            # the backward rematerializes the codes deterministically.
+            y, sx, zx = fused_fqt_fwd(x2, wq, cfg.fwd_act.bits or 8,
+                                      backend=cfg.backend,
+                                      interpret=cfg.pallas_interpret)
+            res = ((x2, sx, zx), wq, key, lead)
+        else:
+            xq = _quantize_role(cfg.fwd_act, x2, None, cfg)          # Q_f
+            y = qt_gemm(xq, wq, backend=cfg.backend,
+                        interpret=cfg.pallas_interpret)
+            res = (xq, wq, key, lead)
     return y.reshape(*lead, w.shape[-1]).astype(dtype), res
 
 
-def _fqt_bwd(cfg: GemmQuantConfig, res, g):
+def _fqt_bwd(cfg: GemmQuantConfig, path: str, res, g):
     xres, wq, key, lead = res
     dtype = g.dtype          # cotangent dtype == stream dtype (y = x.dtype)
     g2 = g.reshape(-1, g.shape[-1]).astype(jnp.float32)
@@ -138,30 +143,41 @@ def _fqt_bwd(cfg: GemmQuantConfig, res, g):
     if cfg.wgrad is None and cfg.agrad is None:
         # QAT (Eq. 4): full-precision gradient through quantized operands.
         xq = xq_remat()
-        dw = xq.dequant().T @ g2
-        dx = g2 @ wq.dequant().T
+        with quant_scope(path, "wgrad", False):
+            dw = xq.dequant().T @ g2
+        with quant_scope(path, "agrad", False):
+            dx = g2 @ wq.dequant().T
     else:
         k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
         if cfg.wgrad is None:
-            dw = xq_remat().dequant().T @ g2
+            with quant_scope(path, "wgrad", False):
+                dw = xq_remat().dequant().T @ g2
         elif f_wg:
-            x2, sx, zx = xres
-            dw = fused_fqt_dw(x2, sx, zx, bits_act, g2, k1,
-                              cfg.wgrad.bits or 8, backend=cfg.backend,
-                              interpret=cfg.pallas_interpret)
+            with quant_scope(path, "wgrad", True):
+                x2, sx, zx = xres
+                dw = fused_fqt_dw(x2, sx, zx, bits_act, g2, k1,
+                                  cfg.wgrad.bits or 8, backend=cfg.backend,
+                                  interpret=cfg.pallas_interpret)
         else:
-            gq1 = _quantize_role(cfg.wgrad, g2, k1, cfg)         # Q_b1
-            dw = qt_gemm_tn(xq_remat(), gq1, backend=cfg.backend,
-                            interpret=cfg.pallas_interpret)
+            with quant_scope(path, "wgrad", True):
+                gq1 = _quantize_role(cfg.wgrad, g2, k1, cfg)         # Q_b1
+                dw = qt_gemm_tn(xq_remat(), gq1, backend=cfg.backend,
+                                interpret=cfg.pallas_interpret)
         if cfg.agrad is None:
-            dx = g2 @ wq.dequant().T
+            with quant_scope(path, "agrad", False):
+                dx = g2 @ wq.dequant().T
         elif f_ag:
-            dx = fused_fqt_dx(g2, k2, cfg.agrad, wq, backend=cfg.backend,
-                              interpret=cfg.pallas_interpret)
+            with quant_scope(path, "agrad", True):
+                dx = fused_fqt_dx(g2, k2, cfg.agrad, wq,
+                                  backend=cfg.backend,
+                                  interpret=cfg.pallas_interpret)
         else:
-            gq2 = _quantize_role(cfg.agrad, g2, k2, cfg)         # Q_b2
-            dx = qt_gemm_nt(gq2, wq, backend=cfg.backend,
-                            interpret=cfg.pallas_interpret)
+            # BHQ's Householder-transform matmuls count as quantized agrad
+            # work — they execute only because this role is quantized
+            with quant_scope(path, "agrad", True):
+                gq2 = _quantize_role(cfg.agrad, g2, k2, cfg)         # Q_b2
+                dx = qt_gemm_nt(gq2, wq, backend=cfg.backend,
+                                interpret=cfg.pallas_interpret)
     dx = dx.reshape(*lead, -1).astype(dtype)   # activation-grad in stream dtype
     return dx, dw, _float0_like(key)           # weight-grad stays fp32 (master)
 
@@ -185,10 +201,15 @@ def fqt_matmul(x: jax.Array, w: jax.Array, key: jax.Array,
     """
     if isinstance(policy, QuantPolicy):
         if not policy.enabled:
-            return x @ w
+            # qfp marker: policy-declared full precision.  The scope also
+            # covers the autodiff transposes of this matmul, so the whole
+            # exact GEMM (primal + both gradients) is attributable.
+            with quant_scope(path, "fwd", False):
+                return x @ w
         cfg = policy.resolve(path)           # validated at resolution
     else:
         cfg = policy.validate()
     if not cfg.quantize_fwd:        # layer pinned exact by an override
-        return x @ w
-    return _fqt(cfg, x, w, key)
+        with quant_scope(path, "fwd", False):
+            return x @ w
+    return _fqt(cfg, path, x, w, key)

@@ -138,11 +138,12 @@ def theorem2_path_norms(layer_fns: Sequence[Callable], params: Sequence,
     ks = []   # K^(l): d vec(h_l) / d vec(theta_l)
     for l in range(L):
         h_in, p = hs[l], params[l]
-        jh = jax.jacobian(lambda h: layer_fns[l](h, p))(h_in)
+        jh = jax.jacobian(lambda h, fn=layer_fns[l], p=p: fn(h, p))(h_in)
         js.append(jh.reshape(hs[l + 1].size, h_in.size))
         p_flat, unravel = jax.flatten_util.ravel_pytree(p)
         jp = jax.jacobian(
-            lambda pf: layer_fns[l](h_in, unravel(pf)))(p_flat)
+            lambda pf, fn=layer_fns[l], h=h_in, un=unravel: fn(h, un(pf)))(
+            p_flat)
         ks.append(jp.reshape(hs[l + 1].size, p_flat.size))
 
     # gamma^{(k,l)}: start from K^{(k)} and push forward through J's.

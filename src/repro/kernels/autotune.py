@@ -36,6 +36,7 @@ import jax
 
 __all__ = [
     "DEFAULT_TILES", "SHIPPED_DEFAULTS", "VMEM_BUDGET_BYTES",
+    "KERNEL_SPECS", "validate_entry",
     "tile_vmem_bytes", "q8_tile_vmem_bytes", "tile_candidates",
     "shape_key", "cache_key", "cache_path", "TuningCache", "get_cache",
     "reset_cache", "lookup_tiles", "record_tiles", "autotune",
@@ -87,6 +88,61 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, kind: str = "q8") -> int:
 def q8_tile_vmem_bytes(bm: int, bn: int, bk: int, fused: bool = False) -> int:
     """The historical bench entry point (``kernel/q8_tile_vmem_bytes``)."""
     return tile_vmem_bytes(bm, bn, bk, "fused_lhs" if fused else "q8")
+
+
+# What each registered kernel requires of a tile entry — the single source
+# the cache loader and the static checker (analysis/kernels.py) validate
+# against.  ``kind`` feeds :func:`tile_vmem_bytes`; ``multiples`` mirrors the
+# ``check_tiles(..., interpret=False)`` alignment each wrapper enforces
+# (q8_matmul.py / fused_fqt.py); ``kv_dequant`` is the bm-only row kernel
+# (kind "rows": bn/bk must be 0, VMEM accounting lives in the wrapper).
+KERNEL_SPECS: Dict[str, Dict[str, object]] = {
+    "q8_matmul": {"kind": "q8", "multiples": (32, 128, 128)},
+    "fused_fwd": {"kind": "fused_lhs", "multiples": (8, 128, 128)},
+    "fused_dx": {"kind": "fused_lhs", "multiples": (8, 128, 128)},
+    "fused_dw": {"kind": "fused_tn", "multiples": (128, 128, 8)},
+    "kv_dequant": {"kind": "rows", "multiples": (8, 0, 0)},
+}
+
+
+def validate_entry(kernel: str, tiles: Tiles,
+                   budget: int = VMEM_BUDGET_BYTES):
+    """Statically validate one (kernel, tiles) cache entry.
+
+    Returns a list of problem strings (empty = legal), or ``None`` when the
+    kernel is not in :data:`KERNEL_SPECS` (nothing to validate against —
+    callers keep such entries and may flag them separately).
+    """
+    spec = KERNEL_SPECS.get(kernel)
+    if spec is None:
+        return None
+    problems = []
+    try:
+        bm, bn, bk = (int(t) for t in tiles)
+    except (TypeError, ValueError):
+        return [f"tiles {tiles!r} are not an (bm, bn, bk) int triple"]
+    mm, mn, mk = spec["multiples"]
+    if spec["kind"] == "rows":
+        if bm <= 0 or bm % mm:
+            problems.append(f"bm={bm} must be a positive multiple of {mm}")
+        if bn or bk:
+            problems.append(f"bn/bk must be 0 for the row kernel, "
+                            f"got ({bn}, {bk})")
+        return problems
+    for name, v, mult in (("bm", bm, mm), ("bn", bn, mn), ("bk", bk, mk)):
+        if v <= 0:
+            problems.append(f"{name}={v} must be positive")
+        elif v % mult:
+            problems.append(f"{name}={v} not a multiple of {mult} "
+                            f"(MXU alignment, tiling.check_tiles)")
+    if not problems:
+        vmem = tile_vmem_bytes(bm, bn, bk, spec["kind"])
+        if vmem > budget:
+            problems.append(
+                f"tile ({bm}, {bn}, {bk}) needs {vmem / 2**20:.1f} MiB "
+                f"VMEM > budget {budget / 2**20:.1f} MiB "
+                f"(kind {spec['kind']!r})")
+    return problems
 
 
 def tile_candidates(m: int, k: int, n: int, kind: str = "q8",
@@ -155,9 +211,27 @@ SHIPPED_DEFAULTS: Dict[str, Tiles] = {
 }
 
 
+def _entry_tiles(entry) -> Optional[Tiles]:
+    """(bm, bn, bk) from a cache entry dict, or None when malformed."""
+    if not isinstance(entry, dict):
+        return None
+    try:
+        return (int(entry["bm"]), int(entry["bn"]), int(entry["bk"]))
+    except (KeyError, TypeError, ValueError):
+        return None
+
+
 class TuningCache:
     """Lazy-loaded JSON tile cache; corrupt or unreadable files degrade to
-    an empty cache with a one-time warning (never an exception)."""
+    an empty cache with a one-time warning (never an exception).
+
+    Individual entries are validated on load: a malformed entry (not a
+    ``{"bm", "bn", "bk"}`` dict) or one whose tiles are illegal for a
+    registered kernel (:func:`validate_entry` — misaligned, over the VMEM
+    budget) is DROPPED with a warning, so a stale or hand-edited cache can
+    never feed an un-lowerable tile into ``lookup_tiles``.  Entries for
+    kernels not in :data:`KERNEL_SPECS` are kept as-is (forward compat;
+    ``python -m repro.analysis kernels`` flags them)."""
 
     def __init__(self, path: Optional[str] = None):
         self.path = path or cache_path()
@@ -174,7 +248,7 @@ class TuningCache:
                 if not isinstance(raw, dict):
                     raise ValueError(f"expected a JSON object, got "
                                      f"{type(raw).__name__}")
-                data = raw
+                data = self._validate(raw)
             except (ValueError, OSError) as e:
                 warnings.warn(
                     f"ignoring corrupt tuning cache {self.path!r} ({e}); "
@@ -184,14 +258,32 @@ class TuningCache:
         self._data = data
         return data
 
+    def _validate(self, raw: dict) -> dict:
+        data: dict = {}
+        dropped = []
+        for key, entry in raw.items():
+            tiles = _entry_tiles(entry)
+            if tiles is None:
+                dropped.append(f"{key}: entry {entry!r} is not a "
+                               f"{{bm, bn, bk}} dict")
+                continue
+            problems = validate_entry(str(key).split("/", 1)[0], tiles)
+            if problems:          # None (unknown kernel) and [] both pass
+                dropped.append(f"{key}: " + "; ".join(problems))
+                continue
+            data[key] = entry
+        if dropped:
+            listing = "\n  ".join(dropped)
+            warnings.warn(
+                f"dropped {len(dropped)} illegal entr"
+                f"{'y' if len(dropped) == 1 else 'ies'} from tuning cache "
+                f"{self.path!r}:\n  {listing}\nre-tune with "
+                f"`python -m benchmarks.bench_kernels --tune`",
+                stacklevel=3)
+        return data
+
     def lookup(self, key: str) -> Optional[Tiles]:
-        entry = self._load().get(key)
-        if not isinstance(entry, dict):
-            return None
-        try:
-            return (int(entry["bm"]), int(entry["bn"]), int(entry["bk"]))
-        except (KeyError, TypeError, ValueError):
-            return None
+        return _entry_tiles(self._load().get(key))
 
     def record(self, key: str, tiles: Tiles,
                us_per_call: Optional[float] = None) -> None:

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import QuantPolicy, get_quantizer, resolve_kv_cache_spec
+from ..core import QuantPolicy, fp_exempt, get_quantizer, resolve_kv_cache_spec
 from .common import dense, init_dense
 from .embeddings import apply_mrope, apply_rope
 
@@ -55,12 +55,16 @@ def _qkv(p, x, key, policy, cfg, positions, path="attn"):
 
 def _sdpa(q, k, v, mask):
     """q: (B,T,KV,G,hd), k/v: (B,S,KV,hd), mask: broadcast (B,1,1,T,S)."""
-    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
-    scores = jnp.einsum("btkgh,bskh->bkgts", q * scale, k)
-    scores = jnp.where(mask, scores, _NEG)
-    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
-    out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
-    return out
+    with fp_exempt("attn.sdpa",
+                   "attention scores/probs GEMMs stay full precision — the "
+                   "paper quantizes only linear layers (Sec. 2.1 setting)"):
+        scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(q.dtype)
+        scores = jnp.einsum("btkgh,bskh->bkgts", q * scale, k)
+        scores = jnp.where(mask, scores, _NEG)
+        probs = jax.nn.softmax(scores.astype(jnp.float32),
+                               axis=-1).astype(q.dtype)
+        out = jnp.einsum("bkgts,bskh->btkgh", probs, v)
+        return out
 
 
 def _apply_attn_hint(q, k, v, sdpa_hint):

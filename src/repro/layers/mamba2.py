@@ -25,11 +25,16 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import QuantPolicy
+from ..core import QuantPolicy, fp_exempt
 from .common import dense, init_dense
 
 __all__ = ["init_mamba2_layer", "mamba2_layer", "mamba2_decode_step",
            "init_mamba2_state"]
+
+_SSD_REASON = ("SSD state contractions act on tiny (headdim x d_state) "
+               "blocks interleaved with data-dependent decays and stay "
+               "full precision (DESIGN.md Sec. 5); FQT covers the "
+               "projection GEMMs")
 
 _CHUNK = 128
 
@@ -117,31 +122,32 @@ def _ssd_chunked(x, dt, A_log, Bm, Cm, h0):
     Bc = r(Bm, (N,))
     Cc = r(Cm, (N,))
 
-    # 1) intra-chunk (diagonal block): Y = (C Bᵀ ⊙ L) X
-    L = jnp.exp(_segsum(ac))                                     # (B,nc,H,cl,cl)
-    scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)               # (B,nc,cl,cl)
-    y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", L, scores, xc)
+    with fp_exempt("mamba.ssd", _SSD_REASON):
+        # 1) intra-chunk (diagonal block): Y = (C Bᵀ ⊙ L) X
+        L = jnp.exp(_segsum(ac))                                 # (B,nc,H,cl,cl)
+        scores = jnp.einsum("bcln,bcsn->bcls", Cc, Bc)           # (B,nc,cl,cl)
+        y_diag = jnp.einsum("bchls,bcls,bcshp->bclhp", L, scores, xc)
 
-    # 2) chunk-final states: S_c = sum_s decay_to_end * B_s x_s
-    a_cum = jnp.cumsum(ac, axis=-1)                              # (B,nc,H,cl)
-    decay_end = jnp.exp(a_cum[..., -1:] - a_cum)
-    S = jnp.einsum("bchs,bcsn,bcshp->bchpn", decay_end, Bc, xc)
+        # 2) chunk-final states: S_c = sum_s decay_to_end * B_s x_s
+        a_cum = jnp.cumsum(ac, axis=-1)                          # (B,nc,H,cl)
+        decay_end = jnp.exp(a_cum[..., -1:] - a_cum)
+        S = jnp.einsum("bchs,bcsn,bcshp->bchpn", decay_end, Bc, xc)
 
-    # 3) inter-chunk recurrence (tiny scan, T/128 steps)
-    chunk_decay = jnp.exp(a_cum[..., -1])                        # (B,nc,H)
-    def step(h, inp):
-        S_c, dec_c = inp
-        return h * dec_c[..., None, None] + S_c, h               # emit pre-chunk state
-    h_fin, h_prevs = jax.lax.scan(
-        step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
-    h_prevs = jnp.moveaxis(h_prevs, 0, 1)                        # (B,nc,H,P,N)
+        # 3) inter-chunk recurrence (tiny scan, T/128 steps)
+        chunk_decay = jnp.exp(a_cum[..., -1])                    # (B,nc,H)
+        def step(h, inp):
+            S_c, dec_c = inp
+            return h * dec_c[..., None, None] + S_c, h       # emit pre-chunk state
+        h_fin, h_prevs = jax.lax.scan(
+            step, h0, (jnp.moveaxis(S, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+        h_prevs = jnp.moveaxis(h_prevs, 0, 1)                    # (B,nc,H,P,N)
 
-    # 4) inter-chunk contribution: y += C_t * decay_in * h_prev
-    decay_in = jnp.exp(a_cum)
-    y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, decay_in, h_prevs)
+        # 4) inter-chunk contribution: y += C_t * decay_in * h_prev
+        decay_in = jnp.exp(a_cum)
+        y_off = jnp.einsum("bcln,bchl,bchpn->bclhp", Cc, decay_in, h_prevs)
 
-    y = (y_diag + y_off).reshape(Bsz, T, H, P)
-    return y, h_fin
+        y = (y_diag + y_off).reshape(Bsz, T, H, P)
+        return y, h_fin
 
 
 def _project(p, x, key, policy, cfg, tag, path):
@@ -199,10 +205,11 @@ def mamba2_decode_step(p, h, state: dict, key, policy: QuantPolicy,
     Bm = bc[:, 0, :N].astype(jnp.float32)
     Cm = bc[:, 0, N:].astype(jnp.float32)
     dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + p["dt_bias"])
-    a = jnp.exp(dt * (-jnp.exp(p["A_log"])))
-    hs = state["h"] * a[..., None, None] + jnp.einsum(
-        "bh,bhp,bn->bhpn", dt, xs, Bm)
-    y = jnp.einsum("bhpn,bn->bhp", hs, Cm) + p["D"][None, :, None] * xs
+    with fp_exempt("mamba.ssd", _SSD_REASON):
+        a = jnp.exp(dt * (-jnp.exp(p["A_log"])))
+        hs = state["h"] * a[..., None, None] + jnp.einsum(
+            "bh,bhp,bn->bhpn", dt, xs, Bm)
+        y = jnp.einsum("bhpn,bn->bhp", hs, Cm) + p["D"][None, :, None] * xs
     y = y.reshape(B, 1, d_inner).astype(z.dtype)
     y = _rms(p["out_norm"], y * jax.nn.silu(z))
     out = dense(p["out_proj"], y, key, policy, tag + 5, f"{path}.out_proj")

@@ -17,7 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import QuantPolicy
+from ..core import QuantPolicy, fp_exempt
 from .common import dense, init_dense
 
 __all__ = ["init_rwkv_layer", "rwkv_layer", "rwkv_decode_step",
@@ -93,17 +93,24 @@ def _head_groupnorm(p, y, H):
 
 def _time_mix_inputs(p, x, x_prev):
     """ddlerp: five data-dependently mixed views of (x, x_prev)."""
-    sx = x_prev - x
-    xxx = x + sx * p["mu_x"]
-    a = jnp.tanh(xxx @ p["tm_w1"])                              # (..., 5*r)
-    a = a.reshape(*a.shape[:-1], 5, _LORA_MIX)
-    delta = jnp.einsum("...fr,frd->...fd", a, p["tm_w2"])       # (..., 5, d)
-    return [(x + sx * (p["mu"][i] + delta[..., i, :])).astype(x.dtype)
-            for i in range(len(_MIX))]  # [xw, xk, xv, xr, xg]
+    with fp_exempt("rwkv.ddlerp",
+                   "tiny low-rank token-shift mix (rank 32 per view); full "
+                   "precision like every non-linear-layer GEMM in the paper"):
+        sx = x_prev - x
+        xxx = x + sx * p["mu_x"]
+        a = jnp.tanh(xxx @ p["tm_w1"])                          # (..., 5*r)
+        a = a.reshape(*a.shape[:-1], 5, _LORA_MIX)
+        delta = jnp.einsum("...fr,frd->...fd", a, p["tm_w2"])   # (..., 5, d)
+        return [(x + sx * (p["mu"][i] + delta[..., i, :])).astype(x.dtype)
+                for i in range(len(_MIX))]  # [xw, xk, xv, xr, xg]
 
 
 def _decay(p, xw):
-    return jnp.exp(-jnp.exp(p["w0"] + jnp.tanh(xw @ p["dec_w1"]) @ p["dec_w2"]))
+    with fp_exempt("rwkv.decay",
+                   "rank-64 data-dependent decay LoRA feeding exp(-exp(.)); "
+                   "precision-critical and tiny next to the R/K/V/G/O GEMMs"):
+        return jnp.exp(-jnp.exp(p["w0"]
+                                + jnp.tanh(xw @ p["dec_w1"]) @ p["dec_w2"]))
 
 
 def _wkv_scan(r, k, v, w, u, s0):
@@ -114,9 +121,13 @@ def _wkv_scan(r, k, v, w, u, s0):
     """
     def step(s, inp):
         rt, kt, vt, wt = inp                                    # (B, H, hd)
-        kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
-        y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
-        s = wt[..., None] * s + kv
+        with fp_exempt("rwkv.wkv",
+                       "WKV recurrence: elementwise/outer-product state "
+                       "math on (hd x hd) blocks, no linear-layer GEMM "
+                       "(DESIGN.md Sec. 5 arch-applicability)"):
+            kv = jnp.einsum("bhk,bhv->bhkv", kt, vt)
+            y = jnp.einsum("bhk,bhkv->bhv", rt, s + u[None, :, :, None] * kv)
+            s = wt[..., None] * s + kv
         return s, y
     xs = tuple(jnp.moveaxis(t, 1, 0) for t in (r, k, v, w))
     s, ys = jax.lax.scan(step, s0, xs)

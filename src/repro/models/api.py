@@ -52,6 +52,7 @@ def model_quant_paths(cfg: ArchConfig) -> tuple:
     elif cfg.family == "hybrid":
         paths = ([f"layers.mamba.{n}" for n in
                   ("z_proj", "x_proj", "bc_proj", "dt_proj", "out_proj")]
+                 + ["layers.fuse"]          # concat(h, h0) -> d_model projection
                  + block("shared"))
     elif cfg.ssm_kind == "rwkv6":
         paths = [f"layers.rwkv.{n}" for n in

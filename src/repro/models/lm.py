@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
 from ..core import QuantPolicy
-from ..layers import (apply_norm, attention, decode_attention, embed,
+from ..layers import (apply_norm, attention, decode_attention, dense, embed,
                       init_attention, init_embedding, init_kv_cache,
                       init_kv_cache_quant, init_lm_head, init_mamba2_layer,
                       init_mamba2_state, init_mlp, init_moe, init_norm,
@@ -38,7 +38,7 @@ def scan_or_loop(body, carry, xs, unroll: bool):
     n = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        xi = jax.tree.map(lambda a: a[i], xs)
+        xi = jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, xi)
         ys.append(y)
     stacked = jax.tree.map(lambda *ls: jnp.stack(ls), *ys)
@@ -191,10 +191,13 @@ def _forward_hybrid(params, h, key, policy, cfg, positions, want_cache,
         hh, msts = scan_or_loop(inner_body, hh,
                                 (mp, ikeys[:cfg.hybrid_period]),
                                 cfg.unroll_scan)
-        # shared attention block on concat(h, h0), fused back to d_model
-        z = (jnp.concatenate([hh, h0], axis=-1)
-             @ fuse["w"].astype(hh.dtype))
+        # shared attention block on concat(h, h0), fused back to d_model.
+        # The fuse projection is a linear layer like any other — it runs
+        # through `dense` so FQT covers it (path "layers.fuse"; the first
+        # quantization-contract audit flagged the old raw `@` as a leak).
         skey = ikeys[-1]
+        z = dense(fuse, jnp.concatenate([hh, h0], axis=-1), skey, policy,
+                  0x70, "layers.fuse")
         if want_cache:
             z2, _, kv = _tx_layer(shared, z, skey, policy, cfg, positions,
                                   state={}, sdpa_hint=sdpa_hint,
@@ -418,7 +421,7 @@ def _pad_kv(kvs, max_seq):
 
 
 def _cache_dtype(cache):
-    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+    for _path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
         if leaf.dtype in (jnp.bfloat16, jnp.float32, jnp.float16):
             return leaf.dtype
     return jnp.float32
@@ -455,8 +458,8 @@ def lm_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig,
             hh, msts = scan_or_loop(inner, hh,
                                     (mp, mst, ikeys[:cfg.hybrid_period]),
                                     cfg.unroll_scan)
-            z = (jnp.concatenate([hh, h0], axis=-1)
-                 @ fuse["w"].astype(hh.dtype))
+            z = dense(fuse, jnp.concatenate([hh, h0], axis=-1), ikeys[-1],
+                      policy, 0x70, "layers.fuse")
             x = apply_norm(shared["ln1"], z, cfg.norm)
             att, kvc = decode_attention(shared["attn"], x, kvc, index,
                                         ikeys[-1], policy, cfg,

@@ -93,7 +93,7 @@ class ShardingPlan:
         if n_lead < 0:
             return P()
         spec = [None] * n_lead
-        for dim, tag in zip(shape[n_lead:], trailing):
+        for dim, tag in zip(shape[n_lead:], trailing, strict=True):
             if tag == "model" and self.model_axis and dim % self.model_size == 0:
                 spec.append(self.model_axis)
             else:

@@ -50,7 +50,7 @@ def test_fqt_backend_parity(quant, mkn):
         if ref is None:
             ref = out
             continue
-        for name, got, want in zip(("y", "dx", "dw"), out, ref):
+        for name, got, want in zip(("y", "dx", "dw"), out, ref, strict=True):
             np.testing.assert_allclose(
                 np.asarray(got), np.asarray(want), rtol=1e-3, atol=5e-3,
                 err_msg=f"{backend}/{quant}/{name} diverged from simulate")
@@ -68,7 +68,7 @@ def test_qat_backend_parity(mkn):
         if ref is None:
             ref = out
             continue
-        for name, got, want in zip(("y", "dx", "dw"), out, ref):
+        for name, got, want in zip(("y", "dx", "dw"), out, ref, strict=True):
             np.testing.assert_allclose(
                 np.asarray(got), np.asarray(want), rtol=1e-3, atol=5e-3,
                 err_msg=f"{backend}/qat/{name} diverged from simulate")

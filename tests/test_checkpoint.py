@@ -25,7 +25,7 @@ def test_roundtrip(tmp_path):
     ckpt.save(10, tree)
     assert ckpt.latest_step() == 10
     out = ckpt.restore(10, jax.tree.map(np.asarray, tree))
-    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree), strict=True):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 

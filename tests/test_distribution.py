@@ -116,8 +116,8 @@ for arch in ARCH_NAMES:
     flat_p = jax.tree_util.tree_leaves_with_path(ap)
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
     import jax.sharding as shd
-    for (path, leaf), spec in zip(flat_p, flat_s):
-        for dim, ax in zip(leaf.shape, tuple(spec)):
+    for (path, leaf), spec in zip(flat_p, flat_s, strict=True):
+        for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
             if ax is not None:
                 size = mesh.shape[ax] if isinstance(ax, str) else 1
                 assert dim % size == 0, (arch, path, leaf.shape, spec)

@@ -234,8 +234,8 @@ for arch in ALL_NAMES:
     flat_p = jax.tree_util.tree_leaves_with_path(astate)
     flat_s = jax.tree.leaves(specs, is_leaf=lambda x: hasattr(x, "index"))
     assert len(flat_p) == len(flat_s)
-    for (path, leaf), spec in zip(flat_p, flat_s):
-        for dim, ax in zip(leaf.shape, tuple(spec)):
+    for (path, leaf), spec in zip(flat_p, flat_s, strict=True):
+        for dim, ax in zip(leaf.shape, tuple(spec), strict=False):
             if ax is not None:
                 assert dim % mesh.shape[ax] == 0, (arch, path, leaf.shape,
                                                    spec)

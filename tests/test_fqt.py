@@ -68,7 +68,7 @@ def test_native_matches_simulate(xwk, quant):
                   (0, 1))(x, w)
     gn = jax.grad(lambda a, b: jnp.sum(fqt_matmul(a, b, k, pn) ** 2),
                   (0, 1))(x, w)
-    for a, b in zip(gs, gn):
+    for a, b in zip(gs, gn, strict=True):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b),
                                    rtol=1e-3, atol=5e-3)
 

@@ -186,7 +186,7 @@ def test_fqt_fused_gradient_parity(quant):
         pol = QuantPolicy.fqt(quant, 5, backend=backend,
                               pallas_interpret=True, fused=True)
         out = _value_and_grads(pol, x, w, kk)
-        for nm, got, want in zip(("y", "dx", "dw"), out, ref):
+        for nm, got, want in zip(("y", "dx", "dw"), out, ref, strict=True):
             np.testing.assert_allclose(
                 np.asarray(got), np.asarray(want), rtol=1e-3, atol=5e-3,
                 err_msg=f"{backend}/fused/{quant}/{nm}")
@@ -196,7 +196,7 @@ def test_fqt_fused_gradient_parity(quant):
         QuantPolicy.fqt(quant, 5, backend="native", fused=True), x, w, kk)
     b = _value_and_grads(
         QuantPolicy.fqt(quant, 5, backend="native", fused=False), x, w, kk)
-    for nm, got, want in zip(("y", "dx", "dw"), a, b):
+    for nm, got, want in zip(("y", "dx", "dw"), a, b, strict=True):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=5e-5, atol=5e-4,
                                    err_msg=f"tight fused-vs-unfused {nm}")
@@ -215,7 +215,7 @@ def test_fqt_fused_bhq_falls_back():
     out = _value_and_grads(
         QuantPolicy.fqt("bhq", 5, backend="native", bhq_block=16,
                         fused=True), x, w, kk)
-    for nm, got, want in zip(("y", "dx", "dw"), out, ref):
+    for nm, got, want in zip(("y", "dx", "dw"), out, ref, strict=True):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-3, atol=5e-3, err_msg=nm)
 
@@ -230,7 +230,7 @@ def test_fqt_fused_qat_remat():
     ref = _value_and_grads(QuantPolicy.qat(backend="simulate"), x, w, kk)
     out = _value_and_grads(
         QuantPolicy.qat(backend="native", fused=True), x, w, kk)
-    for nm, got, want in zip(("y", "dx", "dw"), out, ref):
+    for nm, got, want in zip(("y", "dx", "dw"), out, ref, strict=True):
         np.testing.assert_allclose(np.asarray(got), np.asarray(want),
                                    rtol=1e-3, atol=5e-3, err_msg=nm)
 

@@ -241,7 +241,7 @@ def test_serve_from_trainstate_checkpoint(tmp_path):
                                         max_seq=16, kv_quant=True)
     trained = jax.tree.leaves(eng.state.params)
     restored = jax.tree.leaves(serve.params)
-    assert all(np.allclose(a, b) for a, b in zip(trained, restored))
+    assert all(np.allclose(a, b) for a, b in zip(trained, restored, strict=True))
     rid = serve.submit([1, 2, 3], max_new=3)
     out = serve.run()
     assert len(out[rid].tokens) == 3
@@ -332,7 +332,7 @@ def test_bhq_ragged_through_fqt_backward():
     w = jax.random.normal(jax.random.PRNGKey(4), (8, 6))
     for backend in ("simulate", "native"):
         pol = QuantPolicy.fqt("bhq", 5, bhq_block=4, backend=backend)
-        dx = jax.grad(lambda a: (fqt_matmul(
+        dx = jax.grad(lambda a, pol=pol: (fqt_matmul(
             a, w, jax.random.PRNGKey(5), pol) ** 2).sum())(x)
         assert dx.shape == x.shape
         assert bool(jnp.all(jnp.isfinite(dx)))

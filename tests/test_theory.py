@@ -69,7 +69,7 @@ def test_fqt_gradient_unbiased_end_to_end():
     stats = fqt_gradient_stats(
         lambda k: jax.grad(loss, (0, 1))(w1, w2, fqt, k),
         jax.random.PRNGKey(3), n_samples=512)
-    for m, q in zip(stats["mean"], qat_grad):
+    for m, q in zip(stats["mean"], qat_grad, strict=True):
         scale = float(jnp.max(jnp.abs(q))) + 1e-6
         sem = float(jnp.sqrt(stats["variance"] / q.size / 512))
         assert float(jnp.max(jnp.abs(m - q))) < max(6 * sem, 0.02 * scale)
@@ -84,14 +84,14 @@ def test_variance_bounds_hold():
     key = jax.random.PRNGKey(3)
     for bits in (3, 5, 8):
         _, v = empirical_mean_and_variance(
-            jax.jit(lambda x, k: QUANTS["ptq"](x, k, bits)), g, key, 256)
+            jax.jit(lambda x, k, b=bits: QUANTS["ptq"](x, k, b)), g, key, 256)
         assert float(v) <= float(ptq_variance_bound(g, bits)) * 1.05
         _, v = empirical_mean_and_variance(
-            jax.jit(lambda x, k: QUANTS["psq"](x, k, bits)), g, key, 256)
+            jax.jit(lambda x, k, b=bits: QUANTS["psq"](x, k, b)), g, key, 256)
         assert float(v) <= float(psq_variance_bound(g, bits)) * 1.05
         qt = quantize_bhq_stoch(g, key, bits)
         _, v = empirical_mean_and_variance(
-            jax.jit(lambda x, k: QUANTS["bhq"](x, k, bits)), g, key, 256)
+            jax.jit(lambda x, k, b=bits: QUANTS["bhq"](x, k, b)), g, key, 256)
         assert float(v) <= float(bhq_variance_bound(qt)) * 1.2
 
 
@@ -141,7 +141,7 @@ def test_four_x_variance_per_bit():
         _, v = empirical_mean_and_variance(
             jax.jit(lambda x, k, b=bits: QUANTS["ptq"](x, k, b)), g, key, 512)
         vs.append(float(v))
-    for lo, hi in zip(vs[:-1], vs[1:]):
+    for lo, hi in zip(vs[:-1], vs[1:], strict=True):
         assert 2.5 < hi / lo < 6.0, f"4x-per-bit law violated: {vs}"
 
 
