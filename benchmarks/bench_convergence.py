@@ -5,17 +5,42 @@ synthetic data under Exact / QAT / FQT x {PTQ, PSQ, BHQ} x {8, 5, 4, 3}
 bits and reports final training loss.  The paper's qualitative claims to
 reproduce: 8-bit FQT ~ QAT for all quantizers; as bits drop, PTQ degrades
 first and BHQ last.
+
+``wag_matrix`` is the DoReFa-style ultra-low-bit sweep: (W, A, G) triples
+down to binary weights (the registry's ``binary``/``ternary``/``int4w``
+packed-weight quantizers) with the per-row SR gradient quantizer.  Each
+row's ``us_per_call`` slot carries the *theory overlay* — the predicted
+relative SR gradient-quantization variance at G bits on a standard-normal
+probe (core/theory.py ``quantizer_variance``; ~bin^2/12 scaling, so every
+bit dropped quadruples it) — next to the measured final loss, which is the
+paper's Theorem-2 story: convergence degrades with the variance the
+gradient quantizer injects, while W can drop much further (weight rounding
+is deterministic, biasing the forward only).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import os
 
+import jax
+import jax.numpy as jnp
+
 from repro.configs import get_config
-from repro.core import QuantPolicy
+from repro.core import QuantPolicy, RoleOverride
+from repro.core.theory import quantizer_variance
 from repro.engine import Engine
 
 STEPS = int(os.environ.get("BENCH_CONV_STEPS", "60"))
+
+# W bits -> forward-weight role spec (1/2-bit are the sign-style
+# quantizers; 4-bit is the packable deterministic PTQ)
+_WSPEC = {8: "ptq_det:8", 4: "int4w:4", 2: "ternary:2", 1: "binary:1"}
+
+# DoReFa-style (W, A, G) triples; G=0 means fp32 gradients (QAT)
+WAG_TRIPLES = ((8, 8, 8), (4, 8, 8), (2, 8, 8), (1, 8, 8),
+               (4, 4, 8), (2, 2, 8), (1, 2, 8),
+               (1, 8, 4), (1, 8, 0))
 
 
 def _run(policy, steps=STEPS, seed=0):
@@ -33,4 +58,32 @@ def run():
         for bits in (8, 5, 4, 3):
             loss = _run(QuantPolicy.fqt(quant, bits, bhq_block=32))
             rows.append((f"table1_loss/{quant}/{bits}b", 0.0, loss))
+    return rows
+
+
+def _wag_policy(w: int, a: int, g: int) -> QuantPolicy:
+    base = (QuantPolicy.fqt("psq", g, act_bits=a) if g
+            else QuantPolicy.qat(act_bits=a))
+    ov = (("", RoleOverride.of({"fwd_act": f"ptq_det:{a}",
+                                "fwd_weight": _WSPEC[w]})),)
+    return dataclasses.replace(base, overrides=ov)
+
+
+def _grad_rel_variance(g_bits: int, key=0, shape=(256, 256)) -> float:
+    """Theory overlay: relative SR variance at ``g_bits`` on a N(0,1) probe
+    (per-row PSQ, the wag gradient quantizer).  0 for fp gradients."""
+    if not g_bits:
+        return 0.0
+    probe = jax.random.normal(jax.random.PRNGKey(key), shape)
+    return float(quantizer_variance(probe, "psq", g_bits)
+                 / jnp.sum(probe * probe))
+
+
+def wag_matrix():
+    """The ultra-low-bit (W, A, G) sweep — see module docstring."""
+    rows = []
+    for w, a, g in WAG_TRIPLES:
+        loss = _run(_wag_policy(w, a, g))
+        rows.append((f"wag_loss/w{w}a{a}g{g or 'fp'}",
+                     _grad_rel_variance(g), loss))
     return rows

@@ -24,6 +24,15 @@ Row semantics (``derived`` is the q8/f32 time ratio where it is a ratio):
                         finding and weight quantization (the honest
                         end-to-end number; bandwidth-bound prep dominates
                         the gap to ``fused_q8_fqt_fwd`` on this 1-core host)
+  q8_gemm               kernel-only int8 GEMM + affine epilogue (codes and
+                        coefficient vectors are prepped operands)
+  packed_q4_gemm        same contraction with the weight bit-packed in HBM
+  packed_q2_gemm        (kernels/pack.py + q4_matmul.py): 2 resp. 4 codes
+                        per byte are unpacked per tile inside the K sweep.
+                        ``bytes_moved`` on these three rows is the per-call
+                        HBM traffic the packing shrinks; on this CPU host
+                        the XLA twins time the unpack as extra ALU work, on
+                        TPU the Pallas kernels trade it for bandwidth
   native_q8_fqt_bwd     e2e unfused backward (both Eq. 6 GEMMs)
   fused_q8_fqt_bwd      fused dW (TN megakernel: rematerialized-X det
                         quantize + SR quantize of dY in the K sweep) + fused
@@ -54,11 +63,13 @@ import jax.numpy as jnp
 from repro.core import (QuantPolicy, fqt_matmul, quantize_psq_stoch,
                         quantize_ptq_det, quantize_ptq_stoch, qt_gemm_nt,
                         qt_gemm_tn)
-from repro.core.backend import _ptq_range, affine_factors
+from repro.core.backend import (_ptq_range, affine_factors, apply_epilogue,
+                                epilogue_coeffs)
 import repro.kernels.autotune  # noqa: F401 — registers the submodule
 from repro.kernels import (fused_qboth_tn_matmul, fused_qboth_tn_matmul_xla,
                            fused_qlhs_matmul, fused_qlhs_matmul_xla,
-                           lookup_tiles, q8_tile_vmem_bytes)
+                           lookup_tiles, pack_qtensor, packed_matmul,
+                           packed_matmul_xla, q8_tile_vmem_bytes)
 from repro.kernels.q8_matmul import q8_matmul
 
 # the package re-exports the autotune *function*; grab the module itself
@@ -70,7 +81,8 @@ SHAPES = [(512, 1024, 1024), (1024, 4096, 1024), (4096, 1024, 4096)]
 
 # rows the CI gate checks (derived = q8/f32 ratio, small bench shape)
 GATE_ROWS = ("native_q8_fqt_fwd", "native_q8_fqt_bwd",
-             "fused_q8_fqt_fwd", "fused_q8_fqt_bwd")
+             "fused_q8_fqt_fwd", "fused_q8_fqt_bwd",
+             "q8_gemm", "packed_q4_gemm")
 GATE_FACTOR = 1.10
 
 
@@ -117,7 +129,8 @@ def bench_shape(m: int, k: int, n: int, key, iters: int = 10):
     g = jax.random.normal(jax.random.fold_in(key, 2), (m, n))
 
     t_f32 = min_time_us(jax.jit(lambda a, b: a @ b), x, w, iters=iters)
-    entries.append((f"kernel/f32_gemm/{sfx}", t_f32, 0.0, None))
+    entries.append((f"kernel/f32_gemm/{sfx}", t_f32, 0.0,
+                    {"bytes_moved": int(4.0 * (m * k + k * n + m * n))}))
 
     pol = QuantPolicy.fqt("psq", 8, backend="native")
     t_q8 = min_time_us(jax.jit(
@@ -157,6 +170,49 @@ def bench_shape(m: int, k: int, n: int, key, iters: int = 10):
         lambda a, b: fqt_matmul(a, b, key, pol_f)), x, w, iters=iters)
     entries.append((f"kernel/fused_q8_fqt_fwd_e2e/{sfx}", t_fused_e2e,
                     t_fused_e2e / t_f32, None))
+
+    # ---- packed sub-byte GEMMs (weights stay bit-packed in HBM) ----
+    # packed-vs-int8-vs-f32 on equal footing: codes and the epilogue
+    # coefficient vectors are prepped operands for every row, so the timed
+    # region is GEMM + unpack + epilogue only.  ``bytes_moved`` is the HBM
+    # traffic per call — the quantity the packed layout shrinks (4-bit
+    # weights stream at 2 codes/byte, 2-bit at 4).
+    aq = jax.jit(quantize_ptq_det, static_argnums=1)(x, 8)
+    a8 = aq.int8_codes.reshape(m, k)
+    alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
+    coeffs8 = epilogue_coeffs(a8, alpha_a, beta_a, w8i, ab, bb)
+    if _on_tpu():
+        q8_fn = jax.jit(lambda a, b, *c: q8_matmul(a, b, *c))
+    else:
+        q8_fn = jax.jit(lambda a, b, *c: apply_epilogue(
+            jax.lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.int32
+                                ).astype(jnp.float32), *c))
+    a8, coeffs8 = jax.block_until_ready((a8, coeffs8))
+    t_q8g = min_time_us(q8_fn, a8, w8i, *coeffs8, iters=iters)
+    by_q8 = m * k + k * n + 4.0 * m * n
+    entries.append((f"kernel/q8_gemm/{sfx}", t_q8g, t_q8g / t_f32,
+                    {"bytes_moved": int(by_q8)}))
+    for wbits in (4, 2):
+        pt = pack_qtensor(jax.jit(quantize_ptq_det, static_argnums=1)(
+            w, wbits))
+        abp, bbp = affine_factors(pt.scale, pt.zero, pt.bits)
+        coeffs_p = epilogue_coeffs(a8, alpha_a, beta_a,
+                                   pt.int8_codes.reshape(k, n), abp, bbp)
+        packed2d = pt.packed.reshape(-1, n)
+        if _on_tpu():
+            pfn = (lambda a, p, *c, wb=wbits:
+                   packed_matmul(a, p, *c, wbits=wb, kdim=k))
+        else:
+            pfn = (lambda a, p, *c, wb=wbits:
+                   packed_matmul_xla(a, p, *c, wbits=wb, kdim=k))
+        packed2d, coeffs_p = jax.block_until_ready((packed2d, coeffs_p))
+        t_p = min_time_us(pfn, a8, packed2d, *coeffs_p, iters=iters)
+        by_p = m * k + k * n * wbits / 8.0 + 4.0 * m * n
+        tiles_p = lookup_tiles("q4_matmul", (m, k, n), dtype=f"int{wbits}")
+        entries.append((f"kernel/packed_q{wbits}_gemm/{sfx}", t_p,
+                        t_p / t_f32, {"bytes_moved": int(by_p),
+                                      "tiles": list(tiles_p)}))
 
     # ---- backward ----
     xq = jax.jit(quantize_ptq_det, static_argnums=1)(x, 8)

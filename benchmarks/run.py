@@ -5,6 +5,7 @@ Prints ``name,us_per_call,derived`` CSV.  Suites:
   fig3_*     quantizer variance vs bitwidth            (paper Fig. 3a / 5a)
   fig4_*     quantization bin-size distributions       (paper Fig. 4)
   table1_*   convergence vs (quantizer x bits)         (paper Table 1 proxy)
+  wag_*      ultra-low-bit (W, A, G) sweep w/ theory overlay (DoReFa-style)
   overhead_* quantization overhead vs GEMM             (paper Sec. 4.3)
   kernel_*   kernel timings + TPU-target properties
   train_*    engine step throughput (donation x accumulation)
@@ -28,6 +29,7 @@ def main() -> None:
         "fig3": bench_variance.run,
         "fig4": bench_bins.run,
         "table1": bench_convergence.run,
+        "wag": bench_convergence.wag_matrix,
         "overhead": bench_overhead.run,
         "kernel": bench_kernels.run,
         "train": bench_train_step.run,

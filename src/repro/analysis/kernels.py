@@ -33,7 +33,10 @@ from ..kernels.autotune import (KERNEL_SPECS, SHIPPED_DEFAULTS,
 __all__ = ["KernelFinding", "KernelCheckReport", "check_kernels",
            "purge_bad_entries"]
 
-_LEGAL_DTYPES = ("int8", "uint8", "int4", "float32", "bfloat16", "float16")
+# int4/int2/int1 tag the *packed weight* cache keys (q4_matmul /
+# fused_packed families key tiles per sub-byte width)
+_LEGAL_DTYPES = ("int8", "uint8", "int4", "int2", "int1", "float32",
+                 "bfloat16", "float16")
 
 
 @dataclasses.dataclass(frozen=True)

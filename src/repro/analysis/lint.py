@@ -22,6 +22,14 @@ the code that is supposed to route every linear-layer GEMM through
               static strings; a computed path would make the audit
               nondeterministic and the exemption table unreadable.
 
+RPR002 also runs in **kernel mode** over ``src/repro/kernels/``: there a
+GEMM must be a ``dot_general`` with an explicit ``preferred_element_type``
+(int32 accumulation is the quantization contract at the kernel layer —
+an implicit accumulator dtype is exactly how a sub-byte code GEMM silently
+widens to f32 and loses bit-exactness), and the ``@`` operator is banned
+outright.  ``ref.py`` is exempt: the pure-jnp oracles are deliberately
+naive.
+
 The linter is syntactic by design: it never imports the modules it
 checks, so it runs in CI before any JAX initialization and on files that
 do not import cleanly.
@@ -35,7 +43,7 @@ import os
 from typing import List, Optional, Sequence, Tuple
 
 __all__ = ["LintFinding", "lint_source", "lint_file", "lint_tree",
-           "default_roots", "GEMM_CALLS"]
+           "default_roots", "kernel_default_roots", "GEMM_CALLS"]
 
 GEMM_CALLS = ("einsum", "dot", "matmul", "tensordot", "dot_general",
               "conv_general_dilated")
@@ -169,20 +177,57 @@ class _Checker(ast.NodeVisitor):
                 return
 
 
-def lint_source(source: str, file: str = "<string>") -> List[LintFinding]:
+class _KernelChecker(ast.NodeVisitor):
+    """RPR002 kernel mode (see module docstring)."""
+
+    def __init__(self, file: str):
+        self.file = file
+        self.findings: List[LintFinding] = []
+
+    def _emit(self, node, rule: str, message: str) -> None:
+        self.findings.append(
+            LintFinding(self.file, node.lineno, rule, message))
+
+    def visit_Call(self, node: ast.Call) -> None:
+        name = _call_name(node.func)
+        if name in GEMM_CALLS:
+            if name != "dot_general":
+                self._emit(node, "RPR002",
+                           f"kernel-layer GEMM `{name}(...)`; kernel "
+                           f"modules must contract via lax.dot_general "
+                           f"with an explicit preferred_element_type")
+            elif not any(kw.arg == "preferred_element_type"
+                         for kw in node.keywords):
+                self._emit(node, "RPR002",
+                           "`dot_general(...)` without "
+                           "`preferred_element_type`; an implicit "
+                           "accumulator dtype breaks the int32 "
+                           "accumulation contract")
+        self.generic_visit(node)
+
+    def visit_BinOp(self, node: ast.BinOp) -> None:
+        if isinstance(node.op, ast.MatMult):
+            self._emit(node, "RPR002",
+                       "`@` operator in a kernel module; use "
+                       "lax.dot_general with preferred_element_type")
+        self.generic_visit(node)
+
+
+def lint_source(source: str, file: str = "<string>",
+                mode: str = "contract") -> List[LintFinding]:
     try:
         tree = ast.parse(source, filename=file)
     except SyntaxError as e:
         return [LintFinding(file, e.lineno or 0, "RPR000",
                             f"syntax error: {e.msg}")]
-    checker = _Checker(file)
+    checker = _KernelChecker(file) if mode == "kernel" else _Checker(file)
     checker.visit(tree)
     return checker.findings
 
 
-def lint_file(path: str) -> List[LintFinding]:
+def lint_file(path: str, mode: str = "contract") -> List[LintFinding]:
     with open(path, encoding="utf-8") as f:
-        return lint_source(f.read(), path)
+        return lint_source(f.read(), path, mode)
 
 
 def default_roots() -> Tuple[str, ...]:
@@ -191,13 +236,34 @@ def default_roots() -> Tuple[str, ...]:
     return (os.path.join(pkg, "layers"), os.path.join(pkg, "models"))
 
 
-def lint_tree(roots: Optional[Sequence[str]] = None) -> List[LintFinding]:
+def kernel_default_roots() -> Tuple[str, ...]:
+    """The directories the kernel-mode RPR002 rule applies to."""
+    pkg = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return (os.path.join(pkg, "kernels"),)
+
+
+# pure-jnp oracles are deliberately naive (`@` on int32 IS the reference)
+_KERNEL_EXEMPT_FILES = ("ref.py",)
+
+
+def _walk(roots: Sequence[str]) -> List[str]:
     paths: List[str] = []
-    for root in roots or default_roots():
+    for root in roots:
         for dirpath, _dirnames, filenames in sorted(os.walk(root)):
             paths.extend(os.path.join(dirpath, fn) for fn in sorted(filenames)
                          if fn.endswith(".py"))
+    return paths
+
+
+def lint_tree(roots: Optional[Sequence[str]] = None,
+              kernel_roots: Optional[Sequence[str]] = None
+              ) -> List[LintFinding]:
     findings: List[LintFinding] = []
-    for p in paths:
+    for p in _walk(roots or default_roots()):
         findings.extend(lint_file(p))
+    for p in _walk(kernel_default_roots()
+                   if kernel_roots is None else kernel_roots):
+        if os.path.basename(p) in _KERNEL_EXEMPT_FILES:
+            continue
+        findings.extend(lint_file(p, mode="kernel"))
     return findings

@@ -38,14 +38,20 @@ __all__ = ["signed_code_bound", "accumulator_bound", "max_safe_k",
            "scale_is_degenerate", "check_scale_inputs"]
 
 INT32_MAX = 2**31 - 1
-_DTYPE_BITS = {"int8": 8, "uint8": 8, "int4": 4, "int2": 2,
+_DTYPE_BITS = {"int8": 8, "uint8": 8, "int4": 4, "int2": 2, "int1": 1,
                "int16": 16, "int32": 32}
 
 
 def signed_code_bound(bits: int) -> int:
     """max |c| over shifted-signed b-bit codes ``c = q - 2^(b-1)``,
-    ``q in [0, 2^b - 1]`` — attained at q=0."""
-    if not 2 <= bits <= 32:
+    ``q in [0, 2^b - 1]`` — attained at q=0.
+
+    Admits 1-bit (binary sign planes, bound 1): the packed weight kernels
+    contract 1-bit codes against int8 activations, and their overflow
+    check goes through the same bound (kernels/pack.max_safe_k_packed is
+    the kernel-layer duplicate a tier-1 test pins to this function).
+    """
+    if not 1 <= bits <= 32:
         raise ValueError(f"bits={bits} out of range")
     return 1 << (bits - 1)
 
@@ -122,14 +128,30 @@ def _role_bits(policy: QuantPolicy, path: str,
     if not cfg.quantize_fwd:
         return None
     if role == "fwd":
-        return cfg.fwd_act.bits, cfg.fwd_weight.bits
+        return _spec_bits(cfg.fwd_act), _spec_bits(cfg.fwd_weight)
     if role == "wgrad":
-        return None if cfg.wgrad is None else (cfg.fwd_act.bits,
-                                               cfg.wgrad.bits)
+        return None if cfg.wgrad is None else (_spec_bits(cfg.fwd_act),
+                                               _spec_bits(cfg.wgrad))
     if role == "agrad":
-        return None if cfg.agrad is None else (cfg.agrad.bits,
-                                               cfg.fwd_weight.bits)
+        return None if cfg.agrad is None else (_spec_bits(cfg.agrad),
+                                               _spec_bits(cfg.fwd_weight))
     return None
+
+
+def _spec_bits(spec) -> int:
+    """Effective bitwidth of a resolved spec: explicit bits, else the
+    registered quantizer's ``default_bits`` (int4w=4, binary=1, ternary=2),
+    else the repo-wide 8-bit default — so a ``binary`` weight role is
+    range-checked at its true 1-bit bound, not a phantom 8."""
+    if spec.bits is not None:
+        return spec.bits
+    try:
+        from ..core.registry import get_quantizer
+        q = get_quantizer(spec.name) if spec.name else None
+    except ValueError:
+        q = None
+    default = getattr(q, "default_bits", None)
+    return default if default is not None else 8
 
 
 def _check_one(path: str, role: Optional[str], k: int, lb: int, rb: int,

@@ -48,7 +48,11 @@ import jax.numpy as jnp
 
 from ..kernels.fused_fqt import (fused_qboth_tn_matmul,
                                  fused_qboth_tn_matmul_xla,
-                                 fused_qlhs_matmul, fused_qlhs_matmul_xla)
+                                 fused_qlhs_matmul, fused_qlhs_matmul_xla,
+                                 fused_qlhs_packed_matmul,
+                                 fused_qlhs_packed_matmul_xla)
+from ..kernels.pack import PackedTensor
+from ..kernels.q4_matmul import packed_matmul, packed_matmul_xla
 from ..kernels.q8_matmul import q8_matmul
 from ..kernels.quantize_sr import quantize_sr_rows, quantize_sr_tensor
 from .bhq import BHQTensor
@@ -153,15 +157,50 @@ def _codes2d(qt: QTensor) -> jax.Array:
     return qt.int8_codes.reshape(-1, qt.shape[-1])
 
 
-def qt_gemm(aq: QTensor, bq: QTensor, *, backend: str,
+def qt_gemm(aq: QTensor, bq: Union[QTensor, PackedTensor], *, backend: str,
             interpret: Optional[bool] = None) -> jax.Array:
-    """Forward GEMM  ``A-hat @ B-hat``  (Eq. 3: ``Q_f(X) @ Q_theta(W)``)."""
+    """Forward GEMM  ``A-hat @ B-hat``  (Eq. 3: ``Q_f(X) @ Q_theta(W)``).
+
+    A :class:`PackedTensor` B-operand stays bit-packed in HBM on the
+    native/pallas backends — the packed GEMM kernels unpack tiles in VMEM
+    inside the K-sweep (kernels/q4_matmul.py); ``simulate`` dequantizes
+    either container.
+    """
     if backend == "simulate":
         return _codes_dequant2d(aq) @ _codes_dequant2d(bq)
+    if isinstance(bq, PackedTensor):
+        return _packed_gemm(aq, bq, backend=backend, interpret=interpret)
     alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
     alpha_b, beta_b = affine_factors(bq.scale, bq.zero, bq.bits)
     return q8_gemm(_codes2d(aq), alpha_a, beta_a, _codes2d(bq),
                    alpha_b, beta_b, backend=backend, interpret=interpret)
+
+
+def _packed_gemm(aq: QTensor, pt: PackedTensor, *, backend: str,
+                 interpret: Optional[bool] = None, bias=None) -> jax.Array:
+    """``A-hat @ B-hat`` with the B codes bit-packed (kernels/q4_matmul.py).
+
+    The epilogue coefficient vectors need the *unpacked* colsum; computing
+    them through ``pt.int8_codes`` keeps the unpack transient — XLA fuses
+    the shift/mask chain into the reduce, so no unpacked weight tensor
+    lands in HBM and the GEMM itself streams the packed bytes.
+    """
+    a8 = _codes2d(aq)
+    alpha_a, beta_a = affine_factors(aq.scale, aq.zero, aq.bits)
+    alpha_b, beta_b = affine_factors(pt.scale, pt.zero, pt.bits)
+    coeffs = epilogue_coeffs(a8, alpha_a, beta_a,
+                             pt.int8_codes.reshape(-1, pt.shape[-1]),
+                             alpha_b, beta_b, bias)
+    packed2d = pt.packed.reshape(-1, pt.packed.shape[-1])
+    if backend == "pallas":
+        return packed_matmul(a8, packed2d, *coeffs, wbits=pt.bits,
+                             kdim=pt.kdim,
+                             interpret=resolve_interpret(interpret))
+    if backend == "native":
+        return packed_matmul_xla(a8, packed2d, *coeffs, wbits=pt.bits,
+                                 kdim=pt.kdim)
+    raise ValueError(f"unknown int-GEMM backend {backend!r}; "
+                     f"expected one of {BACKENDS[1:]}")
 
 
 def qt_gemm_tn(aq: QTensor, bq: QTensor, *, backend: str,
@@ -179,7 +218,8 @@ def qt_gemm_tn(aq: QTensor, bq: QTensor, *, backend: str,
                    alpha_b, beta_b, backend=backend, interpret=interpret)
 
 
-def qt_gemm_nt(aq: Union[QTensor, BHQTensor], bq: QTensor, *, backend: str,
+def qt_gemm_nt(aq: Union[QTensor, BHQTensor], bq: Union[QTensor,
+               PackedTensor], *, backend: str,
                interpret: Optional[bool] = None) -> jax.Array:
     """Activation-grad GEMM  ``A-hat @ B-hat.T``  (``Q_b2(dY) @ Q_theta(W).T``).
 
@@ -188,6 +228,11 @@ def qt_gemm_nt(aq: Union[QTensor, BHQTensor], bq: QTensor, *, backend: str,
     (DESIGN.md Sec. 3): ``Q_b(g) @ B-hat.T = S^{-1}((codes + Z) @ B-hat.T)``,
     so the int GEMM runs on raw codes and ``dequant_epilogue`` mixes the
     *output* rows afterwards.
+
+    A :class:`PackedTensor` ``bq`` unpacks transiently here (duck-typed
+    ``int8_codes``): the dX contraction runs over the *lane* axis of the
+    packed layout, which the packed kernels do not cover — the unpack fuses
+    into the transpose read, so no packed copy persists across steps.
     """
     if backend == "simulate":
         a = aq.dequant()
@@ -271,7 +316,8 @@ def requantize_det(x2: jax.Array, scale, zero, bits: int) -> QTensor:
                    zero=jnp.asarray(zero), bits=bits, shape=x2.shape)
 
 
-def fused_fqt_fwd(x2: jax.Array, wq: QTensor, bits_act: int, *, backend: str,
+def fused_fqt_fwd(x2: jax.Array, wq: Union[QTensor, PackedTensor],
+                  bits_act: int, *, backend: str,
                   interpret: Optional[bool] = None):
     """Forward Eq. 3 ``Q_f(x2) @ W-hat`` with Q_f fused into the K-sweep.
 
@@ -285,6 +331,22 @@ def fused_fqt_fwd(x2: jax.Array, wq: QTensor, bits_act: int, *, backend: str,
     alpha_b, beta_b = affine_factors(wq.scale, wq.zero, wq.bits)
     colsum = jnp.sum(w8.astype(jnp.int32), axis=0).astype(jnp.float32)
     u = alpha_b * colsum + float(K) * beta_b
+    if isinstance(wq, PackedTensor):
+        # packed-weight fused forward: same u (the transient unpack above
+        # fuses into the colsum reduce); the GEMM streams the packed bytes
+        packed2d = wq.packed.reshape(-1, wq.packed.shape[-1])
+        if backend == "pallas":
+            y = fused_qlhs_packed_matmul(
+                x2, sa, za, packed2d, alpha_b, beta_b, u, bits=bits_act,
+                wbits=wq.bits, interpret=resolve_interpret(interpret))
+        elif backend == "native":
+            y = fused_qlhs_packed_matmul_xla(
+                x2, sa, za, packed2d, alpha_b, beta_b, u, bits=bits_act,
+                wbits=wq.bits)
+        else:
+            raise ValueError(f"unknown fused backend {backend!r}; "
+                             f"expected one of {BACKENDS[1:]}")
+        return y, scale, zero
     if backend == "pallas":
         y = fused_qlhs_matmul(x2, sa, za, None, w8, alpha_b, beta_b, u,
                               bits=bits_act, tune_key="fused_fwd",

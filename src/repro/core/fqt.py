@@ -37,6 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..kernels.pack import PackedTensor
 from .backend import (fused_fqt_dw, fused_fqt_dx, fused_fqt_fwd, qt_gemm,
                       qt_gemm_nt, qt_gemm_tn, requantize_det)
 from .exempt import quant_scope
@@ -65,8 +66,13 @@ def _fused_roles(cfg: GemmQuantConfig):
     on = cfg.fused if cfg.fused is not None else (cfg.backend == "pallas")
     if not on:
         return False, False, False
+    # packed-weight quantizers (int4w/binary/ternary) ride the fused forward
+    # too — the fused packed kernel quantizes A in the K-sweep and unpacks
+    # the weight tile in VMEM (kernels/fused_fqt.py)
+    w_packed = bool(getattr(get_quantizer(cfg.fwd_weight.name),
+                            "packed_weights", False))
     fwd = (cfg.fwd_act.name == "ptq_det"
-           and cfg.fwd_weight.name == "ptq_det")
+           and (cfg.fwd_weight.name == "ptq_det" or w_packed))
     wg = fwd and cfg.wgrad is not None and cfg.wgrad.name == "ptq"
     ag = cfg.agrad is not None and cfg.agrad.name in ("ptq", "psq")
     return fwd, wg, ag
@@ -199,6 +205,10 @@ def fqt_matmul(x: jax.Array, w: jax.Array, key: jax.Array,
     :class:`GemmQuantConfig` for direct role-level control.  Resolution
     happens at trace time; ``path`` must be a static Python string.
     """
+    if isinstance(w, PackedTensor):
+        # serving path: the weight was quantized and bit-packed ONCE at
+        # load time (serve/engine.py) — inference-only, no custom_vjp
+        return _packed_fwd(x, w, policy, path)
     if isinstance(policy, QuantPolicy):
         if not policy.enabled:
             # qfp marker: policy-declared full precision.  The scope also
@@ -213,3 +223,41 @@ def fqt_matmul(x: jax.Array, w: jax.Array, key: jax.Array,
         with quant_scope(path, "fwd", False):
             return x @ w
     return _fqt(cfg, path, x, w, key)
+
+
+def _packed_fwd(x: jax.Array, pt: PackedTensor,
+                policy: Union[QuantPolicy, GemmQuantConfig],
+                path: str) -> jax.Array:
+    """Forward vs a pre-packed weight: ``Q_f(x) @ B-hat`` with B packed.
+
+    The weight role was already applied when the weight was packed, so only
+    the activation side of the resolved config executes here.  Inference-
+    only by design — training with packed weights goes through the packed
+    *quantizers* (int4w/binary/ternary) on fp32 master weights, where the
+    STE backward needs the (transiently unpacked) codes.
+    """
+    lead = x.shape[:-1]
+    dtype = x.dtype
+    x2 = x.reshape(-1, x.shape[-1]).astype(jnp.float32)
+    if isinstance(policy, QuantPolicy):
+        cfg = policy.resolve(path) if policy.enabled else None
+    else:
+        cfg = policy.validate() if policy is not None else None
+    with quant_scope(path, "fwd", True):
+        if cfg is None or not cfg.quantize_fwd or cfg.backend == "simulate":
+            # weight-only quantization (or the simulate backend): exact /
+            # dequantized activations against the dequantized packed weight
+            if cfg is not None and cfg.quantize_fwd:
+                xv = _quantize_role(cfg.fwd_act, x2, None, cfg).dequant()
+            else:
+                xv = x2
+            y = xv @ pt.dequant().reshape(-1, pt.shape[-1])
+        elif _fused_roles(cfg)[0]:
+            y, _, _ = fused_fqt_fwd(x2, pt, cfg.fwd_act.bits or 8,
+                                    backend=cfg.backend,
+                                    interpret=cfg.pallas_interpret)
+        else:
+            xq = _quantize_role(cfg.fwd_act, x2, None, cfg)
+            y = qt_gemm(xq, pt, backend=cfg.backend,
+                        interpret=cfg.pallas_interpret)
+    return y.reshape(*lead, pt.shape[-1]).astype(dtype)

@@ -33,10 +33,13 @@ import dataclasses
 from typing import Optional
 
 import jax
+import jax.numpy as jnp
 
 from .bhq import quantize_bhq_stoch
-from .quantizers import (quantize_psq_stoch, quantize_ptq_det,
+from .quantizers import (QTensor, quantize_psq_stoch, quantize_ptq_det,
                          quantize_ptq_stoch)
+
+_EPS = 1e-12        # matches core/quantizers._EPS — one zero-range guard
 
 __all__ = [
     "BACKENDS", "ROLES", "KV_CACHE_ROLE", "QuantizerSpec", "GemmQuantConfig",
@@ -195,10 +198,15 @@ class GemmQuantConfig:
             spec = getattr(self, role)
             if spec is None or spec.bits is None:
                 continue
-            if not (isinstance(spec.bits, int) and 2 <= spec.bits <= 8):
+            # the forward weight admits 1-bit (binary sign planes stored
+            # bit-packed); every other role's quantizer needs >= 2 bits —
+            # a 1-bit SR grid degenerates (see kernels/tiling.check_bits)
+            lo = 1 if role == "fwd_weight" else 2
+            if not (isinstance(spec.bits, int) and lo <= spec.bits <= 8):
                 raise ValueError(
                     f"{role}={spec.describe()}: bits must be an int in "
-                    f"[2, 8] (codes are stored as int8)")
+                    f"[{lo}, 8] (codes are stored as int8; 1-bit is "
+                    f"weight-only)")
         return self
 
     def describe_roles(self) -> str:
@@ -365,6 +373,95 @@ class KVCacheInt8(Quantizer):
                                backend=backend, interpret=interpret)
 
 
+class PackedPTQWeight(Quantizer):
+    """``int4w``: deterministic PTQ forward-weight quantizer with bit-packed
+    storage (paper Sec. 2.1 quantizer, sub-byte codes).
+
+    Identical code grid to ``ptq_det`` at the same bitwidth — the returned
+    :class:`~repro.kernels.pack.PackedTensor` duck-types ``QTensor`` and the
+    backend GEMMs unpack tiles in VMEM (``kernels/q4_matmul.py``), so the
+    numerics are bit-exact vs ``ptq_det`` while the weight operand streams
+    2x (4-bit) / 4x (2-bit) fewer HBM bytes.  Weight-role only: the packed
+    kernels keep the weight on the RHS of the forward GEMM.
+    """
+
+    name = "int4w"
+    stochastic = False
+    packed_weights = True
+    default_bits = 4
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        from ..kernels.pack import pack_qtensor
+        bits = spec.bits if spec.bits is not None else self.default_bits
+        if bits not in (2, 4):
+            raise ValueError(
+                f"int4w packs sub-byte PTQ codes; bits must be 4 or 2, got "
+                f"{bits!r} (use 'ptq_det' for 8-bit, 'binary' for 1-bit)")
+        return pack_qtensor(quantize_ptq_det(x2d, bits))
+
+
+class BinaryWeight(Quantizer):
+    """``binary``: 1-bit BWN-style weights ``w -> alpha * sign(w)`` with
+    ``alpha = mean|w|`` (Binary-Weight-Networks, XNOR-Net Eq. 6 — the
+    DoReFa-style W1 point of the ultra-low-bit matrix).
+
+    Codes are the sign plane ``{0, 1}`` packed 8/byte; the affine pair
+    ``scale = 1/(2 alpha)``, ``zero = -alpha`` makes ``dequant`` land on
+    ``{-alpha, +alpha}`` exactly, so the standard epilogue algebra of
+    core/backend.py needs no special case.
+    """
+
+    name = "binary"
+    stochastic = False
+    packed_weights = True
+    default_bits = 1
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        from ..kernels.pack import pack_qtensor
+        if spec.bits not in (None, 1):
+            raise ValueError(
+                f"binary is 1-bit by definition, got bits={spec.bits!r}")
+        x = x2d.astype(jnp.float32)
+        alpha = jnp.mean(jnp.abs(x))
+        codes = (x > 0).astype(jnp.uint8)          # sign(0) -> -alpha
+        scale = 1.0 / (2.0 * alpha + _EPS)
+        return pack_qtensor(QTensor(codes=codes, scale=scale, zero=-alpha,
+                                    bits=1, shape=tuple(x2d.shape)))
+
+
+class TernaryWeight(Quantizer):
+    """``ternary``: TWN-style weights ``w -> alpha * {-1, 0, +1}`` with
+    threshold ``delta = 0.7 mean|w|`` and ``alpha = mean(|w| : |w|>delta)``
+    (Ternary Weight Networks).
+
+    Codes ``{0, 1, 2}`` ride the 2-bit pack (4/byte, one unused bin);
+    ``scale = 1/alpha``, ``zero = -alpha`` puts ``dequant`` on
+    ``{-alpha, 0, +alpha}`` exactly.
+    """
+
+    name = "ternary"
+    stochastic = False
+    packed_weights = True
+    default_bits = 2
+
+    def quantize(self, x2d, key, spec, *, backend, interpret=None):
+        from ..kernels.pack import pack_qtensor
+        if spec.bits not in (None, 2):
+            raise ValueError(
+                f"ternary stores {{-1,0,+1}} as 2-bit codes, got "
+                f"bits={spec.bits!r}")
+        x = x2d.astype(jnp.float32)
+        ax = jnp.abs(x)
+        delta = 0.7 * jnp.mean(ax)
+        mask = ax > delta
+        alpha = jnp.sum(jnp.where(mask, ax, 0.0)) / jnp.maximum(
+            jnp.sum(mask.astype(jnp.float32)), 1.0)
+        codes = jnp.where(mask, jnp.where(x > 0, 2, 0), 1).astype(jnp.uint8)
+        scale = 1.0 / (alpha + _EPS)
+        return pack_qtensor(QTensor(codes=codes, scale=scale, zero=-alpha,
+                                    bits=2, shape=tuple(x2d.shape)))
+
+
 def resolve_kv_cache_spec(value) -> Optional[QuantizerSpec]:
     """Coerce the serving engine's quantized-KV policy knob.
 
@@ -391,3 +488,6 @@ register_quantizer("ptq", StochasticPTQ())
 register_quantizer("psq", StochasticPSQ())
 register_quantizer("bhq", BlockHouseholder())
 register_quantizer("kv_int8", KVCacheInt8())
+register_quantizer("int4w", PackedPTQWeight())
+register_quantizer("binary", BinaryWeight())
+register_quantizer("ternary", TernaryWeight())

@@ -1,6 +1,8 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
   q8_matmul.py     int8 x int8 -> int32 GEMM + fused affine epilogue
+  q4_matmul.py     int8 x bit-packed sub-byte GEMM (unpack in VMEM)
+  pack.py          bit-plane pack/unpack + the PackedTensor container
   fused_fqt.py     quantize -> GEMM -> epilogue megakernels (no HBM codes)
   quantize_sr.py   fused dynamic-range + scale + stochastic-round quantize
   kv_dequant.py    fused affine dequantize of int8 KV-cache rows
@@ -16,14 +18,23 @@ import would cycle.  Use ``from repro.kernels.ops import ...``.
 from .autotune import (autotune, lookup_tiles, q8_tile_vmem_bytes,
                        record_tiles, tile_candidates)
 from .fused_fqt import (fused_qboth_tn_matmul, fused_qboth_tn_matmul_xla,
-                        fused_qlhs_matmul, fused_qlhs_matmul_xla)
+                        fused_qlhs_matmul, fused_qlhs_matmul_xla,
+                        fused_qlhs_packed_matmul,
+                        fused_qlhs_packed_matmul_xla)
 from .kv_dequant import kv_dequant_rows
+from .pack import (PackedTensor, codes_per_byte, max_safe_k_packed,
+                   pack_codes, pack_qtensor, packed_nbytes, unpack_codes)
+from .q4_matmul import packed_matmul, packed_matmul_xla
 from .q8_matmul import q8_matmul
 from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
 
 __all__ = [
     "q8_matmul", "quantize_sr_rows", "quantize_sr_tensor", "kv_dequant_rows",
     "fused_qlhs_matmul", "fused_qlhs_matmul_xla", "fused_qboth_tn_matmul",
-    "fused_qboth_tn_matmul_xla", "autotune", "lookup_tiles", "record_tiles",
-    "tile_candidates", "q8_tile_vmem_bytes",
+    "fused_qboth_tn_matmul_xla", "fused_qlhs_packed_matmul",
+    "fused_qlhs_packed_matmul_xla", "autotune", "lookup_tiles",
+    "record_tiles", "tile_candidates", "q8_tile_vmem_bytes",
+    "PackedTensor", "codes_per_byte", "pack_codes", "unpack_codes",
+    "pack_qtensor", "packed_nbytes", "max_safe_k_packed",
+    "packed_matmul", "packed_matmul_xla",
 ]

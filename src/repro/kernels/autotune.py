@@ -65,14 +65,24 @@ _LANE_CANDIDATES = (128, 256, 512, 1024)
 def tile_vmem_bytes(bm: int, bn: int, bk: int, kind: str = "q8") -> int:
     """Resident VMEM bytes for one grid step of a kernel family.
 
-    ``q8``         int8 A + int8 B + f32 out + int32 acc + epilogue vectors
-    ``fused_lhs``  f32 A tile + uint32 SR bits + int8 B + out/acc + rowsum
-                   scratch + epilogue vectors (quantize-on-the-fly LHS)
-    ``fused_tn``   f32 A + f32 B + uint32 bits + out/acc + colsum scratch
-                   (both operands quantized on the fly; dW kernel)
+    ``q8``           int8 A + int8 B + f32 out + int32 acc + epilogue vectors
+    ``fused_lhs``    f32 A tile + uint32 SR bits + int8 B + out/acc + rowsum
+                     scratch + epilogue vectors (quantize-on-the-fly LHS)
+    ``fused_tn``     f32 A + f32 B + uint32 bits + out/acc + colsum scratch
+                     (both operands quantized on the fly; dW kernel)
+    ``packed``       int8 A + bit-packed B bytes (worst case int4: bk*bn/2)
+                     + int32 unpack scratch (the shift/mask planes
+                     materialize an int32 (bk, bn) tile in VMEM before the
+                     int8 cast) + out/acc + row/colsum scratch + vectors
+    ``fused_packed`` f32 A + packed B + int32 unpack scratch + out/acc +
+                     row/colsum scratch (quantize LHS and unpack RHS in one
+                     K-sweep; the forward megakernel over packed weights)
     """
     vecs = 4 * (2 * bm + 3 * bn)            # scale/zero rows + cs/u/b cols
     out_acc = 4 * bm * bn + 4 * bm * bn     # f32 out block + int32 acc
+    # packed kinds: worst packable width is int4 -> bk*bn/2 packed bytes;
+    # the in-VMEM unpack goes through an int32 (bk, bn) intermediate
+    unpack = bk * bn // 2 + 4 * bk * bn
     if kind == "q8":
         return bm * bk + bk * bn + out_acc + vecs
     if kind == "fused_lhs":
@@ -81,8 +91,13 @@ def tile_vmem_bytes(bm: int, bn: int, bk: int, kind: str = "q8") -> int:
     if kind == "fused_tn":
         return (4 * bk * bm + 4 * bk * bn + 4 * bk * bn
                 + out_acc + 4 * bn + vecs)
-    raise ValueError(f"unknown kernel kind {kind!r}; "
-                     f"expected one of ('q8', 'fused_lhs', 'fused_tn')")
+    if kind == "packed":
+        return bm * bk + unpack + out_acc + 4 * bm + 4 * bn + vecs
+    if kind == "fused_packed":
+        return (4 * bm * bk + unpack + out_acc + 4 * bm + 4 * bn + vecs)
+    raise ValueError(f"unknown kernel kind {kind!r}; expected one of "
+                     f"('q8', 'fused_lhs', 'fused_tn', 'packed', "
+                     f"'fused_packed')")
 
 
 def q8_tile_vmem_bytes(bm: int, bn: int, bk: int, fused: bool = False) -> int:
@@ -102,6 +117,11 @@ KERNEL_SPECS: Dict[str, Dict[str, object]] = {
     "fused_dx": {"kind": "fused_lhs", "multiples": (8, 128, 128)},
     "fused_dw": {"kind": "fused_tn", "multiples": (128, 128, 8)},
     "kv_dequant": {"kind": "rows", "multiples": (8, 0, 0)},
+    # bit-packed weight family (kernels/q4_matmul.py + the packed variant in
+    # kernels/fused_fqt.py); cache keys carry the code width as the dtype
+    # segment (int4/int2/int1) since the packed byte layout changes with it
+    "q4_matmul": {"kind": "packed", "multiples": (32, 128, 128)},
+    "fused_packed": {"kind": "fused_packed", "multiples": (8, 128, 128)},
 }
 
 
@@ -208,6 +228,15 @@ SHIPPED_DEFAULTS: Dict[str, Tiles] = {
     "fused_dw/4096x1024x1024": (128, 512, 256),
     "fused_dw/1024x4096x4096": (128, 512, 256),
     "kv_dequant/rows": (256, 0, 0),
+    # packed-weight family: the int32 unpack intermediate (4*bk*bn) is the
+    # dominant VMEM term, so bk stays at 512 where q8_matmul could afford
+    # 1024
+    "q4_matmul/512x1024x1024": (256, 512, 512),
+    "q4_matmul/1024x4096x1024": (256, 512, 512),
+    "q4_matmul/4096x1024x4096": (256, 512, 512),
+    "fused_packed/512x1024x1024": (128, 512, 512),
+    "fused_packed/1024x4096x1024": (128, 512, 512),
+    "fused_packed/4096x1024x4096": (128, 512, 512),
 }
 
 

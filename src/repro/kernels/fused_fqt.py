@@ -64,12 +64,14 @@ from jax.experimental import pallas as pl
 import jax.experimental.pallas.tpu as pltpu
 
 from .autotune import lookup_tiles
+from .pack import codes_per_byte, max_safe_k_packed, unpack_tile
 from .tiling import (check_bits, check_tiles, pad2d as _pad2,
                      pad_rows as _pad_rows, round_up as _round_up)
 
 __all__ = [
     "fused_qlhs_matmul", "fused_qlhs_matmul_xla",
     "fused_qboth_tn_matmul", "fused_qboth_tn_matmul_xla",
+    "fused_qlhs_packed_matmul", "fused_qlhs_packed_matmul_xla",
 ]
 
 _U32_TO_UNIT = 1.0 / 4294967296.0          # bits * 2^-32, the one SR rule
@@ -320,6 +322,125 @@ def fused_qboth_tn_matmul(af: jax.Array, scale_a, zero_a, bf: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Packed-weight LHS-quantizing kernel: the forward GEMM over bit-packed W
+# ---------------------------------------------------------------------------
+
+def _qlhs_packed_kernel(xf_ref, sa_ref, za_ref, p_ref, ab_ref, bb_ref,
+                        u_ref, o_ref, acc_ref, rsum_ref, *, nk: int,
+                        kdim: int, nbins: float, off_a: int, wbits: int,
+                        bk: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        rsum_ref[...] = jnp.zeros_like(rsum_ref)
+
+    # quantize this (bm, bk) float tile in VMEM (deterministic forward)
+    t = sa_ref[...] * (xf_ref[...] - za_ref[...])
+    c = jnp.clip(jnp.round(t), 0.0, nbins) - off_a
+    col = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+        jnp.int32, c.shape, 1)
+    c8 = jnp.where(col < kdim, c, 0.0).astype(jnp.int8)
+
+    # unpack the (bk/ppb, bn) packed weight tile in VMEM -> shifted int8
+    off_b = 1 << (wbits - 1)
+    w = unpack_tile(p_ref[...], wbits) - off_b
+    row = pl.program_id(2) * bk + jax.lax.broadcasted_iota(
+        jnp.int32, w.shape, 0)
+    w8 = jnp.where(row < kdim, w, 0).astype(jnp.int8)
+
+    acc_ref[...] += jax.lax.dot_general(c8, w8, (((1,), (0,)), ((), ())),
+                                        preferred_element_type=jnp.int32)
+    rsum_ref[...] += jnp.sum(c8.astype(jnp.int32), axis=1, keepdims=True)
+
+    # epilogue identical to _qlhs_kernel (bit-exactness vs the unpacked
+    # fused kernel rests on the matching expression tree)
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        alpha_a = 1.0 / sa_ref[...]                       # (bm, 1)
+        beta_a = off_a * alpha_a + za_ref[...]
+        ab = ab_ref[0, 0]
+        bb = bb_ref[0, 0]
+        acc = acc_ref[...].astype(jnp.float32)
+        a_i = (alpha_a * bb) * rsum_ref[...].astype(jnp.float32)
+        o_ref[...] = acc * (alpha_a * ab) + beta_a * u_ref[...] + a_i
+
+
+def fused_qlhs_packed_matmul(xf: jax.Array, scale_a: jax.Array,
+                             zero_a: jax.Array, packed: jax.Array,
+                             alpha_b, beta_b, u_vec: jax.Array, *,
+                             bits: int, wbits: int,
+                             bm: Optional[int] = None,
+                             bn: Optional[int] = None,
+                             bk: Optional[int] = None,
+                             interpret: bool = False,
+                             tune_key: str = "fused_packed") -> jax.Array:
+    """``Q_det(xf) @ W-hat`` with W bit-packed in HBM: the forward megakernel
+    of the ultra-low-bit track.  Quantizes the (bm, bk) activation tile AND
+    unpacks the (bk/ppb, bn) weight tile in VMEM inside the K-sweep, so no
+    unpacked weight codes ever touch HBM.
+
+    xf: (M, K) f32; scale_a/zero_a: (M, 1) (broadcast a scalar); packed:
+    (ceil(K/ppb), N) uint8 at ``wbits`` codes/byte (kernels/pack.py layout);
+    alpha_b/beta_b: the weight's scalar affine factors; u_vec: (N,) the
+    precomputed epilogue column vector ``alpha_b*colsum(w8) + K*beta_b``
+    (the colsum is a fused unpack+reduce over the packed bytes — see
+    ``core/backend.fused_fqt_fwd``).  Returns (M, N) f32.
+    """
+    check_bits("fused_qlhs_packed_matmul", bits)
+    check_bits("fused_qlhs_packed_matmul", wbits, lo=1)
+    ppb = codes_per_byte(wbits)
+    M, K = xf.shape
+    N = packed.shape[1]
+    if packed.shape[0] != -(-K // ppb):
+        raise ValueError(
+            f"fused_qlhs_packed_matmul: packed rows {packed.shape[0]} != "
+            f"ceil({K}/{ppb}) for {wbits}-bit codes")
+    safe = max_safe_k_packed(bits, wbits)
+    if K > safe:
+        raise ValueError(
+            f"fused_qlhs_packed_matmul: K={K} overflows the int32 "
+            f"accumulator for int{bits} x int{wbits} codes "
+            f"(max_safe_k={safe})")
+    tm, tn, tk = lookup_tiles(tune_key, (M, K, N), dtype=f"int{wbits}")
+    bm, bn, bk = (tm if bm is None else bm, tn if bn is None else bn,
+                  tk if bk is None else bk)
+    bm = min(bm, _round_up(M, 8))        # f32 A tile: sublane 8
+    bn = min(bn, _round_up(N, 128))
+    bk = min(bk, _round_up(K, 128))      # ppb | 128, so ppb | bk
+    check_tiles("fused_qlhs_packed_matmul", (M, K, N), (bm, bn, bk),
+                interpret=interpret, multiples=(8, 128, 128))
+    Mp, Np, Kp = _round_up(M, bm), _round_up(N, bn), _round_up(K, bk)
+    nk = Kp // bk
+    row = lambda i, j, k: (i, 0)
+    scalar = lambda i, j, k: (0, 0)
+    out = pl.pallas_call(
+        functools.partial(_qlhs_packed_kernel, nk=nk, kdim=K,
+                          nbins=float((1 << bits) - 1),
+                          off_a=1 << (bits - 1), wbits=wbits, bk=bk),
+        grid=(Mp // bm, Np // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bm, 1), row), pl.BlockSpec((bm, 1), row),
+            pl.BlockSpec((bk // ppb, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((1, 1), scalar), pl.BlockSpec((1, 1), scalar),
+            pl.BlockSpec((1, bn), lambda i, j, k: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32),
+                        pltpu.VMEM((bm, 1), jnp.int32)],
+        interpret=interpret,
+    )(_pad2(xf.astype(jnp.float32), Mp, Kp),
+      _pad_rows(scale_a.reshape(M, 1), Mp, edge=True),
+      _pad_rows(zero_a.reshape(M, 1), Mp, edge=True),
+      _pad2(packed, Kp // ppb, Np),
+      jnp.asarray(alpha_b, jnp.float32).reshape(1, 1),
+      jnp.asarray(beta_b, jnp.float32).reshape(1, 1),
+      _pad2(u_vec.reshape(1, N), 1, Np))
+    return out[:M, :N]
+
+
+# ---------------------------------------------------------------------------
 # XLA twins — the `native`-backend fused path and the test oracles
 # ---------------------------------------------------------------------------
 
@@ -404,3 +525,42 @@ def fused_qboth_tn_matmul_xla(af: jax.Array, scale_a, zero_a, bf: jax.Array,
     beta_b = off_b * alpha_b + zb
     u_j = alpha_b * jnp.sum(cb, axis=0) + float(K) * beta_b
     return acc * (alpha_a * alpha_b) + beta_a * u_j[None, :] + a_vec[:, None]
+
+
+def fused_qlhs_packed_matmul_xla(xf: jax.Array, scale_a: jax.Array,
+                                 zero_a: jax.Array, packed: jax.Array,
+                                 alpha_b, beta_b, u_vec: jax.Array, *,
+                                 bits: int, wbits: int) -> jax.Array:
+    """XLA twin of :func:`fused_qlhs_packed_matmul` — identical quantizer
+    and unpack math; the shift/mask unpack chain fuses into the GEMM
+    operand read, so no unpacked weight tensor persists in HBM either.
+    The expression tree mirrors :func:`fused_qlhs_matmul_xla` exactly."""
+    check_bits("fused_qlhs_packed_matmul_xla", bits)
+    check_bits("fused_qlhs_packed_matmul_xla", wbits, lo=1)
+    ppb = codes_per_byte(wbits)
+    M, K = xf.shape
+    if packed.shape[0] != -(-K // ppb):
+        raise ValueError(
+            f"fused_qlhs_packed_matmul_xla: packed rows {packed.shape[0]} "
+            f"!= ceil({K}/{ppb}) for {wbits}-bit codes")
+    safe = max_safe_k_packed(bits, wbits)
+    if K > safe:
+        raise ValueError(
+            f"fused_qlhs_packed_matmul_xla: K={K} overflows the int32 "
+            f"accumulator for int{bits} x int{wbits} codes "
+            f"(max_safe_k={safe})")
+    nbins = float((1 << bits) - 1)
+    off_a = float(1 << (bits - 1))
+    off_b = 1 << (wbits - 1)
+    t = scale_a * (xf.astype(jnp.float32) - zero_a)
+    c = jnp.clip(jnp.round(t), 0.0, nbins) - off_a
+    w8 = (unpack_tile(packed, wbits)[:K, :] - off_b).astype(jnp.int8)
+    # one materialization each (see fused_qlhs_matmul_xla)
+    c, w8 = _opt_barrier((c, w8))
+    acc = _codes_dot(c, w8, (((1,), (0,)), ((), ())))
+    alpha_a = 1.0 / scale_a                               # (M, 1)
+    beta_a = off_a * alpha_a + zero_a
+    ab = jnp.asarray(alpha_b, jnp.float32)
+    bb = jnp.asarray(beta_b, jnp.float32)
+    a_i = (alpha_a * bb) * jnp.sum(c, axis=1, keepdims=True)
+    return acc * (alpha_a * ab) + beta_a * u_vec[None, :] + a_i

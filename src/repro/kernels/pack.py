@@ -1,0 +1,228 @@
+"""Bit-plane packing for sub-byte quantized tensors.
+
+The registry's sub-8-bit specs (``QuantizerSpec.bits`` = 4/2/1) historically
+materialized their codes in full uint8 lanes, so lower bitwidths bought zero
+memory or bandwidth.  This module is the storage half of the ultra-low-bit
+track: unsigned codes are packed along the *contraction* axis (axis ``-2`` of
+a ``(K, N)`` weight) into dense uint8 bytes —
+
+  * int4: 2 codes/byte   (``ppb = 2``)
+  * int2: 4 codes/byte   (``ppb = 4``)
+  * 1-bit: 8 codes/byte  (sign planes, ``ppb = 8``)
+
+Byte row ``r`` of the packed array holds logical rows ``r*ppb .. r*ppb+ppb-1``;
+logical row ``k`` lives in byte ``k // ppb`` at bitfield ``bits * (k % ppb)``
+(little-endian within the byte).  The lane (column) axis is untouched, so the
+TPU-friendly 128-lane alignment of the unpacked operand carries over to the
+packed one.
+
+Ragged shapes follow the repo-wide pad-and-slice convention: ``pack_codes``
+zero-pads K up to a multiple of ``ppb`` and ``unpack_codes`` slices back.
+Padding rows unpack to code 0 — which is *not* the zero point of the shifted
+signed layout — so GEMM consumers must mask ``row >= kdim`` (the Pallas
+kernels do, exactly like the fused-quantize kernels mask padded K columns).
+
+``unpack_tile`` is the in-kernel primitive: it is pure ``jnp`` shift/mask
+arithmetic on a VMEM-resident tile, so the packed GEMM kernels
+(kernels/q4_matmul.py, the packed variant in kernels/fused_fqt.py) unpack
+inside the K-sweep and the weight operand stays packed in HBM.
+
+:class:`PackedTensor` mirrors :class:`~repro.core.quantizers.QTensor`'s
+attribute surface (``int8_codes`` / ``scale`` / ``zero`` / ``bits`` /
+``shape`` / ``dequant``), so backend code written against QTensor duck-types
+over packed weights; only the GEMM dispatch itself special-cases packing.
+This module imports nothing from ``repro.core`` — it sits below the backend
+in the layer order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "PACK_WIDTHS",
+    "PackedTensor",
+    "codes_per_byte",
+    "pack_codes",
+    "unpack_codes",
+    "unpack_tile",
+    "pack_qtensor",
+    "packed_nbytes",
+    "max_safe_k_packed",
+]
+
+# Bitwidths with a whole number of codes per byte.  bits == 8 degenerates to
+# the identity packing (1 code/byte) and is accepted for uniformity.
+PACK_WIDTHS = (1, 2, 4, 8)
+
+
+def codes_per_byte(bits: int) -> int:
+    """Codes packed per storage byte (8 // bits); validates ``bits``."""
+    if bits not in PACK_WIDTHS:
+        raise ValueError(f"bits={bits} is not packable; a byte holds a whole "
+                         f"number of codes only for bits in {PACK_WIDTHS}")
+    return 8 // bits
+
+
+def _check_2d_plus(name: str, x: jax.Array) -> None:
+    if x.ndim < 2:
+        raise ValueError(f"{name} must have ndim >= 2 (pack axis is -2), "
+                         f"got shape {x.shape}")
+
+
+def pack_codes(codes: jax.Array, bits: int) -> jax.Array:
+    """Pack unsigned codes ``(..., K, N)`` uint8 -> ``(..., ceil(K/ppb), N)``.
+
+    Codes must already be in ``[0, 2^bits - 1]`` (the canonical unsigned
+    QTensor layout); out-of-range bits would silently corrupt neighbouring
+    fields, so callers quantize first.  K is zero-padded up to a multiple of
+    ``ppb`` — the pad rows carry code 0 and are sliced away by
+    :func:`unpack_codes` / masked by the packed GEMM kernels.
+    """
+    ppb = codes_per_byte(bits)
+    _check_2d_plus("codes", codes)
+    k, n = codes.shape[-2], codes.shape[-1]
+    kp = -(-k // ppb) * ppb
+    c = codes.astype(jnp.uint8)
+    if kp != k:
+        pad = [(0, 0)] * (codes.ndim - 2) + [(0, kp - k), (0, 0)]
+        c = jnp.pad(c, pad)
+    c = c.reshape(*codes.shape[:-2], kp // ppb, ppb, n).astype(jnp.uint32)
+    out = jnp.zeros(c.shape[:-2] + (n,), jnp.uint32)
+    for i in range(ppb):
+        out = out | (c[..., i, :] << (bits * i))
+    return out.astype(jnp.uint8)
+
+
+def unpack_codes(packed: jax.Array, bits: int, kdim: int) -> jax.Array:
+    """Inverse of :func:`pack_codes`: ``(..., KP, N)`` -> ``(..., kdim, N)``.
+
+    ``kdim`` is the logical row count; rows ``kdim .. KP*ppb`` are padding
+    and are sliced off.
+    """
+    ppb = codes_per_byte(bits)
+    _check_2d_plus("packed", packed)
+    kp_bytes, n = packed.shape[-2], packed.shape[-1]
+    if not 0 < kdim <= kp_bytes * ppb:
+        raise ValueError(f"kdim={kdim} incompatible with packed rows "
+                         f"{kp_bytes} at {ppb} codes/byte")
+    tile = unpack_tile(packed, bits)
+    return tile[..., :kdim, :].astype(jnp.uint8)
+
+
+def unpack_tile(packed: jax.Array, bits: int) -> jax.Array:
+    """In-kernel unpack: ``(..., R, N)`` uint8 -> ``(..., R*ppb, N)`` int32.
+
+    Pure shift/mask/reshape ``jnp`` arithmetic — safe inside a Pallas kernel
+    body on a VMEM tile (the row interleave is a sublane shuffle; the lane
+    axis is untouched).  Returns *unshifted* unsigned code values as int32;
+    callers subtract the signed offset and apply their own K masking.
+    """
+    ppb = codes_per_byte(bits)
+    mask = (1 << bits) - 1
+    v = packed.astype(jnp.int32)
+    planes = [(v >> (bits * i)) & mask for i in range(ppb)]
+    if ppb == 1:
+        return planes[0]
+    st = jnp.stack(planes, axis=-2)                  # (..., R, ppb, N)
+    return st.reshape(*packed.shape[:-2], packed.shape[-2] * ppb,
+                      packed.shape[-1])
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class PackedTensor:
+    """Bit-packed affine-quantized tensor ``x ~= codes / scale + zero``.
+
+    The packed counterpart of :class:`~repro.core.quantizers.QTensor` for
+    weight operands: ``packed`` stores ``ppb = 8 // bits`` unsigned codes per
+    byte along the contraction axis.  ``kdim`` (static) is the logical K so
+    the trailing logical shape ``(kdim, N)`` survives pytree slicing — a
+    stacked per-layer weight ``(L, K, N)`` packs to leaves with a leading
+    ``L`` axis, and ``lax.scan`` slices those leaves while the static fields
+    stay per-layer-correct.  ``scale``/``zero`` must broadcast against the
+    unpacked codes (scalars per tensor; ``(L, 1, 1)`` when stacked).
+    """
+
+    packed: jax.Array         # (..., ceil(kdim/ppb), N) uint8
+    scale: jax.Array          # S     — x ~= codes / S + Z
+    zero: jax.Array           # Z
+    bits: int = dataclasses.field(metadata=dict(static=True))
+    kdim: int = dataclasses.field(metadata=dict(static=True))
+
+    @property
+    def shape(self) -> tuple:
+        """Logical (unpacked) shape ``(..., kdim, N)``."""
+        return tuple(self.packed.shape[:-2]) + (self.kdim,
+                                                self.packed.shape[-1])
+
+    @property
+    def ndim(self) -> int:
+        return self.packed.ndim
+
+    @property
+    def codes(self) -> jax.Array:
+        """Unpacked unsigned codes in the canonical QTensor layout."""
+        return unpack_codes(self.packed, self.bits, self.kdim)
+
+    @property
+    def int8_codes(self) -> jax.Array:
+        """Unpacked codes shifted to signed int8 (``code - 2^(b-1)``)."""
+        off = 1 << (self.bits - 1)
+        tile = unpack_tile(self.packed, self.bits)[..., :self.kdim, :]
+        return (tile - off).astype(jnp.int8)
+
+    @property
+    def int8_offset(self) -> int:
+        return 1 << (self.bits - 1)
+
+    def dequant(self) -> jax.Array:
+        return self.codes.astype(jnp.float32) / self.scale + self.zero
+
+    @property
+    def nbytes(self) -> int:
+        """Resident bytes of the packed representation (codes + affine)."""
+        return int(self.packed.size * self.packed.dtype.itemsize
+                   + self.scale.size * self.scale.dtype.itemsize
+                   + self.zero.size * self.zero.dtype.itemsize)
+
+
+def pack_qtensor(qt) -> PackedTensor:
+    """Pack any QTensor-shaped object (codes/scale/zero/bits/shape) whose
+    logical shape has ndim >= 2.  Codes are reshaped to the logical shape
+    first — QTensor stores flattened-row codes for per-sample quantizers."""
+    shape = tuple(qt.shape)
+    if len(shape) < 2:
+        raise ValueError(f"cannot pack a rank-{len(shape)} tensor; the pack "
+                         f"axis is the contraction axis of a (K, N) operand")
+    codes = qt.codes.reshape(shape)
+    return PackedTensor(packed=pack_codes(codes, qt.bits),
+                        scale=jnp.asarray(qt.scale), zero=jnp.asarray(qt.zero),
+                        bits=qt.bits, kdim=shape[-2])
+
+
+def packed_nbytes(shape, bits: int) -> int:
+    """Code bytes for a logical ``shape`` packed at ``bits`` (no affine)."""
+    ppb = codes_per_byte(bits)
+    k, n = shape[-2], shape[-1]
+    lead = 1
+    for d in shape[:-2]:
+        lead *= int(d)
+    return lead * (-(-int(k) // ppb)) * int(n)
+
+
+def max_safe_k_packed(lhs_bits: int, rhs_bits: int) -> int:
+    """Largest contraction K with no int32 overflow for shifted-signed codes.
+
+    Same bound as :func:`repro.analysis.ranges.max_safe_k` (kept local so the
+    kernel layer does not import the analysis package; a tier-1 test pins the
+    two to agree): worst-case per-element product is
+    ``2^(a-1) * 2^(b-1)``, so ``K_max = (2^31 - 1) // that``.
+    """
+    if not (1 <= lhs_bits <= 32 and 1 <= rhs_bits <= 32):
+        raise ValueError(f"bits out of range: {lhs_bits}, {rhs_bits}")
+    prod = (1 << (lhs_bits - 1)) * (1 << (rhs_bits - 1))
+    return (2**31 - 1) // prod

@@ -107,11 +107,17 @@ def check_tiles(kernel: str, shape, tiles, *, interpret: bool,
             f"requirement (CPU debugging only)")
 
 
-def check_bits(kernel: str, bits) -> int:
-    """Validate a quantization bitwidth: an int in [2, 8]."""
+def check_bits(kernel: str, bits, lo: int = 2) -> int:
+    """Validate a quantization bitwidth: an int in [lo, 8].
+
+    The in-kernel quantizers need at least 2 bits (a 1-bit SR grid has a
+    single bin boundary the round/clip algebra degenerates on), so ``lo``
+    defaults to 2; the bit-packed weight kernels consume *pre-quantized*
+    codes and pass ``lo=1`` to admit binary sign planes.
+    """
     if not isinstance(bits, int) or isinstance(bits, bool) or \
-            not 2 <= bits <= 8:
+            not lo <= bits <= 8:
         raise ValueError(
             f"{kernel}: bits={bits!r} out of range; the int8 kernels "
-            f"support bitwidths 2..8")
+            f"support bitwidths {lo}..8")
     return bits

@@ -98,6 +98,13 @@ def main(argv=None):
     ap.add_argument("--kv-cache", choices=["int8", "fp32"], default="int8",
                     help="KV-cache storage: int8 = ~4x more resident slots "
                          "at equal HBM (core/kv_cache.py)")
+    ap.add_argument("--weight-bits", type=int, default=None,
+                    choices=[8, 4, 2],
+                    help="bit-pack every dense kernel once at load "
+                         "(kernels/pack.py): resident GEMM weights drop to "
+                         "bits/32 of fp32 and decode unpacks tiles "
+                         "in-kernel; omit to keep fp32 weights with "
+                         "per-step forward quantization")
     ap.add_argument("--backend", default="simulate",
                     choices=["simulate", "native", "pallas"],
                     help="execution backend for the quantized ops, "
@@ -115,12 +122,18 @@ def main(argv=None):
         eng = ServeEngine.from_checkpoint(
             cfg, args.ckpt_dir, policy=policy, slots=args.slots,
             max_seq=args.max_seq, kv_quant=kv_quant, eos_id=args.eos,
-            seed=args.seed)
+            seed=args.seed, weight_bits=args.weight_bits)
     else:
         params = build_model(cfg).init(jax.random.PRNGKey(args.seed))
         eng = ServeEngine(cfg, params, policy=policy, slots=args.slots,
                           max_seq=args.max_seq, kv_quant=kv_quant,
-                          eos_id=args.eos, seed=args.seed)
+                          eos_id=args.eos, seed=args.seed,
+                          weight_bits=args.weight_bits)
+
+    if args.weight_bits is not None:
+        from ..serve.engine import weight_nbytes
+        print(f"[serve] packed w{args.weight_bits} weights: "
+              f"{weight_nbytes(eng.params)} resident bytes")
 
     # warmup: compile the decode step AND every prefill/insert length
     # bucket the workload can hit, off the clock

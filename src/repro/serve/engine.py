@@ -48,11 +48,71 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..checkpoint import CheckpointManager
-from ..core import QuantPolicy, quantize_kv_rows, resolve_kv_cache_spec
+from ..core import (QuantPolicy, RoleOverride, quantize_kv_rows,
+                    quantize_ptq_det, resolve_kv_cache_spec)
+from ..kernels.pack import PackedTensor, pack_codes, pack_qtensor
 from ..models import build_model
 from .sampling import sample_tokens, slot_keys
 
-__all__ = ["Request", "Completion", "ServeEngine"]
+__all__ = ["Request", "Completion", "ServeEngine", "pack_dense_weights",
+           "weight_nbytes"]
+
+# bits -> the forward-weight role spec the packed policy advertises
+# (8-bit packs to identity bytes but still drops 4x vs fp32 resident
+# weights and skips the per-step weight quantize)
+_PACKED_WEIGHT_SPECS = {8: "ptq_det:8", 4: "int4w:4", 2: "int4w:2"}
+
+
+def _pack_leaf(w: jax.Array, bits: int) -> PackedTensor:
+    """Quantize one dense kernel to ``bits`` (deterministic per-tensor PTQ,
+    the paper's Q_theta) and bit-pack it.  A stacked ``(L, K, N)`` leaf is
+    quantized *per layer* — one affine pair per scanned layer, shaped
+    ``(L, 1, 1)`` so ``lax.scan`` slices it alongside the packed codes."""
+    w = jnp.asarray(w, jnp.float32)
+    if w.ndim == 2:
+        return pack_qtensor(quantize_ptq_det(w, bits))
+    nbins = float((1 << bits) - 1)
+    zero = jnp.min(w, axis=(-2, -1), keepdims=True)
+    hi = jnp.max(w, axis=(-2, -1), keepdims=True)
+    scale = nbins / jnp.maximum(hi - zero, 1e-12)
+    codes = jnp.clip(jnp.round(scale * (w - zero)), 0, nbins)
+    return PackedTensor(packed=pack_codes(codes.astype(jnp.uint8), bits),
+                        scale=scale, zero=zero, bits=bits, kdim=w.shape[-2])
+
+
+def pack_dense_weights(params, bits: int):
+    """Replace every dense kernel leaf (dict key ``"w"``, ndim >= 2) with a
+    :class:`PackedTensor` quantized once at load time.
+
+    Embeddings (``"table"``), biases, and norm scales stay fp — they are
+    not GEMM operands of the packed kernels.  ``dense`` feeds the packed
+    leaf straight into ``fqt_matmul``, which routes pre-packed weights
+    through the inference-only packed forward (core/fqt.py).
+    """
+    if bits not in _PACKED_WEIGHT_SPECS:
+        raise ValueError(f"weight_bits={bits!r}: packable widths are "
+                         f"{sorted(_PACKED_WEIGHT_SPECS)}")
+
+    def walk(node):
+        if isinstance(node, dict):
+            return {k: (_pack_leaf(v, bits)
+                        if k == "w" and getattr(v, "ndim", 0) >= 2
+                        else walk(v))
+                    for k, v in node.items()}
+        if isinstance(node, (list, tuple)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    return walk(params)
+
+
+def weight_nbytes(params) -> int:
+    """Resident bytes of a params tree (packed leaves count packed)."""
+    total = 0
+    for leaf in jax.tree.leaves(
+            params, is_leaf=lambda x: isinstance(x, PackedTensor)):
+        total += int(leaf.nbytes)
+    return total
 
 
 @dataclasses.dataclass(frozen=True)
@@ -112,7 +172,8 @@ class ServeEngine:
 
     def __init__(self, cfg, params, *, policy: Optional[QuantPolicy] = None,
                  slots: int = 4, max_seq: int = 64, kv_quant=False,
-                 eos_id: Optional[int] = None, seed: int = 0):
+                 eos_id: Optional[int] = None, seed: int = 0,
+                 weight_bits: Optional[int] = None):
         if cfg.family in ("vlm", "audio"):
             raise ValueError(
                 f"{cfg.name}: the serving engine drives token-input decoder "
@@ -127,6 +188,19 @@ class ServeEngine:
         self.model = build_model(cfg)
         self.policy = policy or QuantPolicy.qat()
         self.params = params
+        self.weight_bits = weight_bits
+        if weight_bits is not None:
+            # pack once at load: the resident weights drop to bits/32 of
+            # fp32 and every decode step skips the per-step weight
+            # quantize (the packed kernels unpack tiles in VMEM).  The
+            # appended catch-all override is applied last, so it wins the
+            # fwd_weight role for every path, matching the packed leaves.
+            self.params = pack_dense_weights(params, weight_bits)
+            self.policy = dataclasses.replace(
+                self.policy,
+                overrides=tuple(self.policy.overrides) + (
+                    ("", RoleOverride.of(
+                        {"fwd_weight": _PACKED_WEIGHT_SPECS[weight_bits]})),))
         self.slots = slots
         self.max_seq = max_seq
         self.eos_id = eos_id

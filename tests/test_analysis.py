@@ -398,3 +398,28 @@ def h(x, w):
 def test_lint_syntax_error_reported():
     [f] = lint_source("def broken(:\n")
     assert f.rule == "RPR000"
+
+
+def test_lint_kernel_mode_contract():
+    src = """
+import jax.numpy as jnp
+from jax import lax
+
+def good(a, b):
+    return lax.dot_general(a, b, (((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.int32)
+
+def widened(a, b):
+    return lax.dot_general(a, b, (((1,), (0,)), ((), ())))  # implicit acc
+
+def raw(a, b):
+    return jnp.matmul(a, b) + a @ b
+"""
+    rules = [f.rule for f in lint_source(src, mode="kernel")]
+    assert rules == ["RPR002", "RPR002", "RPR002"]
+    # contract mode would also demand fp_exempt; kernel mode accepts a
+    # bare dot_general as long as the accumulator dtype is explicit
+    assert lint_source(
+        "def f(a, b):\n"
+        "    return dot_general(a, b, d,"
+        " preferred_element_type=jnp.int32)\n", mode="kernel") == []
