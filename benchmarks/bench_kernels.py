@@ -66,6 +66,7 @@ from repro.core import (QuantPolicy, fqt_matmul, quantize_psq_stoch,
 from repro.core.backend import (_ptq_range, affine_factors, apply_epilogue,
                                 epilogue_coeffs)
 import repro.kernels.autotune  # noqa: F401 — registers the submodule
+from repro.analysis.planner import gemm_bytes_moved
 from repro.kernels import (fused_qboth_tn_matmul, fused_qboth_tn_matmul_xla,
                            fused_qlhs_matmul, fused_qlhs_matmul_xla,
                            lookup_tiles, pack_qtensor, packed_matmul,
@@ -130,7 +131,7 @@ def bench_shape(m: int, k: int, n: int, key, iters: int = 10):
 
     t_f32 = min_time_us(jax.jit(lambda a, b: a @ b), x, w, iters=iters)
     entries.append((f"kernel/f32_gemm/{sfx}", t_f32, 0.0,
-                    {"bytes_moved": int(4.0 * (m * k + k * n + m * n))}))
+                    {"bytes_moved": int(gemm_bytes_moved(m, k, n, 32, 32))}))
 
     pol = QuantPolicy.fqt("psq", 8, backend="native")
     t_q8 = min_time_us(jax.jit(
@@ -190,7 +191,7 @@ def bench_shape(m: int, k: int, n: int, key, iters: int = 10):
                                 ).astype(jnp.float32), *c))
     a8, coeffs8 = jax.block_until_ready((a8, coeffs8))
     t_q8g = min_time_us(q8_fn, a8, w8i, *coeffs8, iters=iters)
-    by_q8 = m * k + k * n + 4.0 * m * n
+    by_q8 = gemm_bytes_moved(m, k, n, 8, 8)
     entries.append((f"kernel/q8_gemm/{sfx}", t_q8g, t_q8g / t_f32,
                     {"bytes_moved": int(by_q8)}))
     for wbits in (4, 2):
@@ -208,7 +209,7 @@ def bench_shape(m: int, k: int, n: int, key, iters: int = 10):
                    packed_matmul_xla(a, p, *c, wbits=wb, kdim=k))
         packed2d, coeffs_p = jax.block_until_ready((packed2d, coeffs_p))
         t_p = min_time_us(pfn, a8, packed2d, *coeffs_p, iters=iters)
-        by_p = m * k + k * n * wbits / 8.0 + 4.0 * m * n
+        by_p = gemm_bytes_moved(m, k, n, 8, wbits)
         tiles_p = lookup_tiles("q4_matmul", (m, k, n), dtype=f"int{wbits}")
         entries.append((f"kernel/packed_q{wbits}_gemm/{sfx}", t_p,
                         t_p / t_f32, {"bytes_moved": int(by_p),

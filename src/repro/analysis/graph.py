@@ -27,7 +27,7 @@ import jax
 
 from ..core.exempt import MARKER_RE
 
-__all__ = ["GemmSite", "iter_gemm_sites", "site_flops"]
+__all__ = ["GemmSite", "iter_gemm_sites", "site_flops", "classify_stack"]
 
 GEMM_PRIMS = ("dot_general", "conv_general_dilated")
 
@@ -47,6 +47,8 @@ class GemmSite:
     path: Optional[str]            # marker path (None when unmarked)
     role: Optional[str]            # marker role for q/qfp (None otherwise)
     src: str                       # user-code "file:line" (best effort)
+    m: int = 0                     # output rows (batch*M); 0 = unknown
+    n: int = 0                     # output cols N; 0 = unknown
 
     @property
     def integer_gemm(self) -> bool:
@@ -62,23 +64,34 @@ def _prod(xs) -> int:
     return out
 
 
-def _dot_general_stats(eqn) -> Tuple[float, int]:
-    """(flops-per-execution, contraction size) for one dot_general."""
+def _dot_general_stats(eqn) -> Tuple[float, int, int, int]:
+    """(flops-per-execution, K, M, N) for one dot_general.
+
+    M folds the batch dims in (it is "output rows the GEMM produces"), so
+    the planner's bytes-moved model sees the same m*k / k*n / m*n products
+    the bench bytes column uses.
+    """
     (lc, rc), (lb, _rb) = eqn.params["dimension_numbers"]
     lhs, rhs = eqn.invars[0].aval.shape, eqn.invars[1].aval.shape
     batch = _prod(lhs[i] for i in lb)
     k = _prod(lhs[i] for i in lc)
     m = _prod(d for i, d in enumerate(lhs) if i not in set(lb) | set(lc))
     n = _prod(d for i, d in enumerate(rhs) if i not in set(_rb) | set(rc))
-    return 2.0 * batch * m * n * k, k
+    return 2.0 * batch * m * n * k, k, batch * m, n
 
 
-def _conv_stats(eqn) -> Tuple[float, int]:
-    """Approximate conv FLOPs: 2 * out-elements * (C_in/groups * K_spatial)."""
+def _conv_stats(eqn) -> Tuple[float, int, int, int]:
+    """Approximate conv FLOPs: 2 * out-elements * (C_in/groups * K_spatial).
+
+    (M, N) map a conv onto its implicit GEMM: N = output channels, M =
+    output elements per channel — good enough for the bytes-moved model.
+    """
     out = eqn.outvars[0].aval.shape
     rhs = eqn.invars[1].aval.shape            # (O, I/g, *spatial) canonical-ish
     k = _prod(rhs[1:])                        # contraction per output element
-    return 2.0 * _prod(out) * k, int(k)
+    n = int(rhs[0])
+    m = max(1, _prod(out) // max(n, 1))
+    return 2.0 * _prod(out) * k, int(k), m, n
 
 
 def _classify(stack: str) -> Tuple[str, Optional[str], Optional[str]]:
@@ -140,16 +153,16 @@ def _walk(jaxpr, mult: int, prefix: str, out: List[GemmSite]) -> None:
         prim = eqn.primitive.name
         if prim in GEMM_PRIMS:
             if prim == "dot_general":
-                flops, k = _dot_general_stats(eqn)
+                flops, k, m, n = _dot_general_stats(eqn)
             else:
-                flops, k = _conv_stats(eqn)
+                flops, k, m, n = _conv_stats(eqn)
             kind, path, role = _classify(full)
             out.append(GemmSite(
                 primitive=prim, flops=flops * mult, contract=k, mult=mult,
                 lhs_dtype=str(eqn.invars[0].aval.dtype),
                 rhs_dtype=str(eqn.invars[1].aval.dtype),
                 stack=full, kind=kind, path=path, role=role,
-                src=_src_of(eqn)))
+                src=_src_of(eqn), m=m, n=n))
         for sub, m in _sub_jaxprs(eqn):
             _walk(sub, mult * m, full, out)
 
@@ -160,6 +173,11 @@ def iter_gemm_sites(closed_jaxpr) -> Tuple[GemmSite, ...]:
     out: List[GemmSite] = []
     _walk(jaxpr, 1, "", out)
     return tuple(out)
+
+
+# the soundness + planner passes attribute non-GEMM equations with the
+# same innermost-marker rule the GEMM walk uses
+classify_stack = _classify
 
 
 def site_flops(sites, kind: Optional[str] = None) -> float:

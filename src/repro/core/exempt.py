@@ -37,8 +37,8 @@ from typing import Dict, Iterator
 
 import jax
 
-__all__ = ["fp_exempt", "quant_scope", "exemption_registry",
-           "clear_exemptions", "MARKER_RE", "GEMM_ROLES"]
+__all__ = ["fp_exempt", "quant_scope", "key_scope", "exemption_registry",
+           "clear_exemptions", "MARKER_RE", "KEY_SCOPE_RE", "GEMM_ROLES"]
 
 # Roles a quant_scope marker may claim.  "fwd" additionally covers the
 # autodiff *transposes* of an exact-pinned forward GEMM (the whole matmul —
@@ -49,6 +49,14 @@ GEMM_ROLES = ("fwd", "wgrad", "agrad")
 # q[path|role] / qfp[path|role] / fp[path] inside a name-stack string.  The
 # payload never contains ']' — enforced below — so the lazy body is safe.
 MARKER_RE = re.compile(r"\b(qfp|q|fp)\[([^\]]*)\]")
+
+# qk[path]: the key-lineage marker the FQT backward opens around its
+# per-site PRNG derivation (fold_in/split), so the soundness pass can name
+# the layer a key-aliasing finding belongs to even though that derivation
+# happens before any role scope opens.  Deliberately NOT matched by
+# MARKER_RE ('qk' is not in its alternation and \b cannot split 'qk'), so
+# the contract auditor ignores it.
+KEY_SCOPE_RE = re.compile(r"\bqk\[([^\]]*)\]")
 
 _LOCK = threading.Lock()
 _REGISTRY: Dict[str, str] = {}
@@ -103,6 +111,20 @@ def quant_scope(path: str, role: str, quantized: bool):
         raise ValueError(f"path={path!r} may not contain '[' or ']'")
     tag = "q" if quantized else "qfp"
     return jax.named_scope(f"{tag}[{path}|{role}]")
+
+
+def key_scope(path: str):
+    """Marker scope ``qk[path]`` for per-site PRNG-key derivation.
+
+    The FQT backward derives its two SR keys (``fold_in`` + ``split``)
+    *before* opening the wgrad/agrad role scopes, so those equations would
+    otherwise carry an empty name stack.  The soundness pass
+    (repro.analysis.soundness) uses this marker to attribute key-lineage
+    findings (aliased or scan-invariant SR keys) to a layer path.
+    """
+    if "]" in path or "[" in path:
+        raise ValueError(f"path={path!r} may not contain '[' or ']'")
+    return jax.named_scope(f"qk[{path}]")
 
 
 def exemption_registry() -> Dict[str, str]:

@@ -40,7 +40,7 @@ import numpy as np
 from ..kernels.pack import PackedTensor
 from .backend import (fused_fqt_dw, fused_fqt_dx, fused_fqt_fwd, qt_gemm,
                       qt_gemm_nt, qt_gemm_tn, requantize_det)
-from .exempt import quant_scope
+from .exempt import key_scope, quant_scope
 from .policy import QuantPolicy
 from .registry import GemmQuantConfig, QuantizerSpec, get_quantizer
 
@@ -154,7 +154,11 @@ def _fqt_bwd(cfg: GemmQuantConfig, path: str, res, g):
         with quant_scope(path, "agrad", False):
             dx = g2 @ wq.dequant().T
     else:
-        k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
+        # qk[path] marks the per-site key derivation (it happens before any
+        # role scope opens) so the soundness pass can attribute key-lineage
+        # findings to this layer
+        with key_scope(path):
+            k1, k2 = jax.random.split(jax.random.fold_in(key, 0x5151))
         if cfg.wgrad is None:
             with quant_scope(path, "wgrad", False):
                 dw = xq_remat().dequant().T @ g2

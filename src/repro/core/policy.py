@@ -57,7 +57,7 @@ from .registry import (BACKENDS, EXACT_NAME, ROLES, GemmQuantConfig,
                        QuantizerSpec, get_quantizer)
 
 __all__ = ["QuantPolicy", "RoleOverride", "EXACT", "QAT", "FQT8_BHQ",
-           "BACKENDS"]
+           "BACKENDS", "overrides_to_json", "overrides_from_json"]
 
 _BIT_FIELDS = ("act_bits", "weight_bits", "wgrad_bits", "grad_bits",
                "dp_grad_bits")
@@ -291,3 +291,52 @@ class QuantPolicy:
 EXACT = QuantPolicy.exact()
 QAT = QuantPolicy.qat()
 FQT8_BHQ = QuantPolicy.fqt("bhq", 8)
+
+
+# ---------------------------------------------------------------------------
+# Override (de)serialization — the precision-planner interchange format
+# ---------------------------------------------------------------------------
+
+def _spec_to_json(spec: Optional[QuantizerSpec]):
+    if spec is None:
+        return None
+    d = {"name": spec.name, "bits": spec.bits}
+    d.update(dict(spec.params))
+    return d
+
+
+def overrides_to_json(overrides) -> list:
+    """Overrides (any form ``QuantPolicy(overrides=...)`` accepts) -> a
+    JSON-serializable ``[[pattern, {role: spec-dict, ...}], ...]`` list.
+
+    Inverse of :func:`overrides_from_json`; the planner
+    (``repro.analysis plan``) writes this format and
+    ``launch/train.py --override-file`` reads it back.
+    """
+    out = []
+    for pattern, ov in _normalize_overrides(overrides):
+        d: dict = {}
+        if ov.exact:
+            d["exact"] = True
+        if ov.bits is not None:
+            d["bits"] = ov.bits
+        for role in ROLES:
+            spec = getattr(ov, role)
+            if spec is not None:
+                d[role] = _spec_to_json(spec)
+        out.append([pattern, d])
+    return out
+
+
+def overrides_from_json(data) -> tuple:
+    """JSON overrides -> the normalized tuple ``QuantPolicy(overrides=...)``
+    consumes.  Accepts the list-of-pairs form :func:`overrides_to_json`
+    emits, a ``{pattern: override}`` dict, or the full planner JSON document
+    (uses its ``"overrides"`` key)."""
+    if isinstance(data, dict) and "overrides" in data:
+        data = data["overrides"]
+    if isinstance(data, dict):
+        pairs = list(data.items())
+    else:
+        pairs = [(p, v) for p, v in data]
+    return _normalize_overrides(pairs)

@@ -126,23 +126,39 @@ def main(argv=None):
                          "order): PATTERN=exact | PATTERN=bits:B | "
                          "PATTERN=ROLE:QUANT[:B]  e.g. 'lm_head=exact' "
                          "'layers.mlp=agrad:bhq:4'")
+    ap.add_argument("--override-file", default=None, metavar="PLAN.json",
+                    help="load per-layer overrides from a JSON file — the "
+                         "format `python -m repro.analysis plan --out` "
+                         "writes (applied before any --override, so CLI "
+                         "entries win)")
     args = ap.parse_args(argv)
 
+    file_overrides = ()
+    if args.override_file:
+        import json
+
+        from ..core.policy import overrides_from_json
+        with open(args.override_file) as fh:
+            doc = json.load(fh)
+        try:
+            file_overrides = overrides_from_json(doc)
+        except (TypeError, ValueError, KeyError) as e:
+            ap.error(f"--override-file {args.override_file}: {e}")
+    overrides = tuple(file_overrides) + tuple(args.override)
+
     if args.quant == "exact":
-        if args.override:
-            ap.error("--override has no effect with --quant exact "
-                     "(the policy quantizes nothing to override)")
+        if overrides:
+            ap.error("--override/--override-file have no effect with "
+                     "--quant exact (the policy quantizes nothing)")
         policy = QuantPolicy.exact()
     elif args.quant == "qat":
-        policy = QuantPolicy.qat(backend=args.backend,
-                                 overrides=tuple(args.override))
+        policy = QuantPolicy.qat(backend=args.backend, overrides=overrides)
     else:
         policy = QuantPolicy.fqt(args.quant, args.grad_bits, bhq_block=256,
-                                 backend=args.backend,
-                                 overrides=tuple(args.override))
+                                 backend=args.backend, overrides=overrides)
 
     cfg = get_config(args.arch, smoke=args.smoke)
-    if args.override:
+    if overrides:
         from ..models import model_quant_paths
         print("[train] resolved per-layer quantizer specs:")
         for path, desc in policy.spec_table(model_quant_paths(cfg)):

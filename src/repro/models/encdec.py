@@ -91,22 +91,28 @@ def _decode_seq(params, tokens, enc_out, key, policy, cfg, want_cache=False,
     def body(carry, xs):
         hh = carry
         lp, lk = xs
+        # self- and cross-attention share qkey tags 1-4, so they need
+        # distinct subkeys or their SR streams alias across the two modules
+        # (caught by `repro.analysis soundness`, rule SND002)
+        lk_self = jax.random.fold_in(lk, 1)
+        lk_cross = jax.random.fold_in(lk, 2)
         x = apply_norm(lp["ln1"], hh, cfg.norm)
         if want_cache:
-            att, (k, v) = attention(lp["self_attn"], x, lk, policy, cfg, pos,
-                                    return_kv=True, sdpa_hint=sdpa_hint,
+            att, (k, v) = attention(lp["self_attn"], x, lk_self, policy, cfg,
+                                    pos, return_kv=True, sdpa_hint=sdpa_hint,
                                     path="decoder.layers.self_attn")
             skv = {"k": k.reshape(B, T, -1), "v": v.reshape(B, T, -1)}
         else:
-            att = attention(lp["self_attn"], x, lk, policy, cfg, pos,
+            att = attention(lp["self_attn"], x, lk_self, policy, cfg, pos,
                             sdpa_hint=sdpa_hint,
                             path="decoder.layers.self_attn")
             skv = 0
         hh = hh + att.astype(hh.dtype)
         x = apply_norm(lp["ln_x"], hh, cfg.norm)
-        ck, cv = cross_attention_kv(lp["cross_attn"], enc_out, lk, policy,
-                                    cfg, path="decoder.layers.cross_attn")
-        hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
+        ck, cv = cross_attention_kv(lp["cross_attn"], enc_out, lk_cross,
+                                    policy, cfg,
+                                    path="decoder.layers.cross_attn")
+        hh = hh + attention(lp["cross_attn"], x, lk_cross, policy, cfg, pos,
                             causal=False, kv_override=(ck, cv),
                             sdpa_hint=sdpa_hint,
                             path="decoder.layers.cross_attn").astype(hh.dtype)
@@ -192,8 +198,11 @@ def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig,
 
     def body(hh, xs):
         lp, skv, xkv, lk = xs
+        # same self/cross subkey split as _decode_seq (qkey tags collide)
+        lk_self = jax.random.fold_in(lk, 1)
+        lk_cross = jax.random.fold_in(lk, 2)
         x = apply_norm(lp["ln1"], hh, cfg.norm)
-        att, skv = decode_attention(lp["self_attn"], x, skv, index, lk,
+        att, skv = decode_attention(lp["self_attn"], x, skv, index, lk_self,
                                     policy, cfg,
                                     path="decoder.layers.self_attn",
                                     kv_quant=kv_quant)
@@ -204,7 +213,7 @@ def encdec_decode(params, cache, batch, policy: QuantPolicy, cfg: ArchConfig,
         cv = xkv["v"].reshape(B, Sx, cfg.n_kv_heads, cfg.hd).astype(hh.dtype)
         pos = (jnp.zeros((B, 1), jnp.int32)
                + jnp.asarray(index, jnp.int32).reshape(-1, 1))
-        hh = hh + attention(lp["cross_attn"], x, lk, policy, cfg, pos,
+        hh = hh + attention(lp["cross_attn"], x, lk_cross, policy, cfg, pos,
                             causal=False, kv_override=(ck, cv),
                             path="decoder.layers.cross_attn").astype(hh.dtype)
         x = apply_norm(lp["ln2"], hh, cfg.norm)

@@ -298,8 +298,12 @@ def chunked_head_loss(params, h, labels, key, policy, cfg,
             hc = jax.lax.with_sharding_constraint(hc, rows_sh)
 
     def body(acc, xs):
-        h_c, y_c = xs
-        logits = lm_head(params["lm_head"], h_c, key, policy)
+        h_c, y_c, c_idx = xs
+        # per-chunk fold: Theorem 1 needs the head-grad SR draws independent
+        # across chunks — reusing `key` verbatim here made every chunk's
+        # quantization noise identical (caught by repro.analysis soundness)
+        logits = lm_head(params["lm_head"], h_c,
+                         jax.random.fold_in(key, c_idx), policy)
         vp = logits.shape[-1]
         if vp > cfg.vocab_size:
             neg = jnp.full((vp - cfg.vocab_size,), -1e30, logits.dtype)
@@ -308,7 +312,8 @@ def chunked_head_loss(params, h, labels, key, policy, cfg,
         ll = jnp.take_along_axis(logp, y_c[:, None], axis=-1)[:, 0]
         return acc + jnp.sum(ll), 0
 
-    total, _ = scan_or_loop(body, jnp.float32(0.0), (hc, yc), unroll)
+    total, _ = scan_or_loop(body, jnp.float32(0.0),
+                            (hc, yc, jnp.arange(n_chunks)), unroll)
     return -total / R
 
 

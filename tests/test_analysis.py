@@ -179,6 +179,45 @@ def test_int32_wraparound_at_predicted_k():
     assert worst(k_safe + 1) < 0                              # wrapped
 
 
+def test_int32_wraparound_at_predicted_k_asymmetric_8x4():
+    """Same exactness for the W4A8-style asymmetric pair: max_safe_k(8, 4)
+    is the last safe contraction for int8 codes against worst-case 4-bit
+    codes (|c| = 8), and K+1 wraps for real."""
+    k_safe = max_safe_k(8, 4)
+    assert k_safe == (2**31 - 1) // (128 * 8) == 16 * max_safe_k(8, 8) + 15
+    dims = (((1,), (0,)), ((), ()))
+
+    def worst(k):
+        a = jnp.full((1, k), -128, jnp.int8)
+        b = jnp.full((k, 1), -signed_code_bound(4), jnp.int8)
+        return int(jax.lax.dot_general(
+            a, b, dims, preferred_element_type=jnp.int32)[0, 0])
+
+    assert worst(k_safe) == accumulator_bound(k_safe, 8, 4)   # no wrap
+    assert worst(k_safe + 1) < 0                              # wrapped
+
+
+def test_w4a8_widens_the_checked_bound():
+    """check_sites bounds each role by the *policy* widths: a contraction
+    that overflows an 8x8 agrad GEMM is certified safe once the weights go
+    4-bit (W4A8), without retracing anything."""
+    from repro.analysis import GemmSite
+    from repro.analysis.ranges import check_sites
+
+    k = max_safe_k(8, 8) + 1
+    assert k <= max_safe_k(8, 4)
+    site = GemmSite(primitive="dot_general", flops=2.0 * k, contract=k,
+                    mult=1, lhs_dtype="float32", rhs_dtype="float32",
+                    stack="q[layers.0.mlp|agrad]", kind="quantized",
+                    path="layers.0.mlp", role="agrad", src="test", m=4, n=4)
+    red = check_sites([site], QuantPolicy.fqt("bhq", 8))
+    assert any(f.severity == "overflow" and not f.ok
+               and (f.lhs_bits, f.rhs_bits) == (8, 8) for f in red)
+    green = check_sites([site], QuantPolicy.fqt("bhq", 8, weight_bits=4))
+    assert all(f.ok for f in green)
+    assert any((f.lhs_bits, f.rhs_bits) == (8, 4) for f in green)
+
+
 def test_int16_wraparound_brute_force_low_bits():
     """Same bound at 4 bits against a int16 accumulator, checked by numpy
     wraparound — exercises the acc_bits generality."""
@@ -423,3 +462,24 @@ def raw(a, b):
         "def f(a, b):\n"
         "    return dot_general(a, b, d,"
         " preferred_element_type=jnp.int32)\n", mode="kernel") == []
+
+
+# ---------------------------------------------------------------------------
+# CLI --format json
+# ---------------------------------------------------------------------------
+
+def test_cli_lint_json(capsys):
+    from repro.analysis.__main__ import main
+    rc = main(["lint", "--format", "json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["tool"] == "lint" and doc["ok"] == (rc == 0)
+    assert isinstance(doc["findings"], list)
+
+
+def test_cli_kernels_json(tmp_cache, capsys):
+    from repro.analysis.__main__ import main
+    rc = main(["kernels", "--format", "json"])
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["tool"] == "kernels" and doc["ok"] == (rc == 0)
+    for f in doc["findings"]:
+        assert {"rule", "severity", "path", "detail"} <= set(f)

@@ -1,0 +1,198 @@
+"""Variance-budget precision planner (analysis/planner.py).
+
+Pins the three claims the planner rests on: the bytes-moved cost model is
+the bench's, the predicted per-site variances are the Proposition 4
+closed forms (cross-checked against Monte-Carlo), and the solvers honour
+the budget while beating the uniform-8-bit baseline at equal bytes.  The
+end product — overrides JSON — must round-trip through QuantPolicy and
+pass the contract audit.
+"""
+
+import json
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import (audit_model, check_model, collect_plan_sites,
+                            gemm_bytes_moved, legal_widths, plan_model,
+                            site_candidates)
+from repro.analysis.planner import _variance_proxy
+from repro.analysis.ranges import max_safe_k
+from repro.configs import get_config
+from repro.core import QuantPolicy
+from repro.core.bhq import quantize_bhq_stoch
+from repro.core.policy import overrides_from_json
+from repro.core.quantizers import quantize_psq_stoch, quantize_ptq_stoch
+from repro.core.theory import empirical_mean_and_variance
+
+CFG = get_config("statquant-tx", smoke=True)
+PTQ8 = QuantPolicy.fqt("ptq", 8)
+
+
+# ---------------------------------------------------------------------------
+# Cost model + width legality
+# ---------------------------------------------------------------------------
+
+def test_bytes_moved_matches_bench_columns():
+    m, k, n = 96, 128, 64
+    # f32 GEMM: both operands 4B, result 4B
+    assert gemm_bytes_moved(m, k, n, 32, 32) == 4 * (m * k + k * n + m * n)
+    # int8 x int8: 1B operands, f32 out
+    assert gemm_bytes_moved(m, k, n, 8, 8) == m * k + k * n + 4 * m * n
+    # packed W4: activations int8, weights half a byte
+    assert gemm_bytes_moved(m, k, n, 8, 4) == m * k + k * n / 2 + 4 * m * n
+    assert gemm_bytes_moved(m, k, n, 8, 2) == m * k + k * n / 4 + 4 * m * n
+
+
+def test_legal_widths_accumulator_and_role_bounds():
+    assert legal_widths("agrad", 64) == (8, 4, 2)
+    # past the 8x8 bound only narrower SR widths survive
+    k = max_safe_k(8, 8) + 1
+    assert legal_widths("agrad", k) == (4, 2)
+    assert legal_widths("wgrad", k) == (4, 2)
+    # backward roles never go binary; the forward weight may
+    assert 1 not in legal_widths("wgrad", 64, widths=(8, 4, 2, 1))
+    assert 1 in legal_widths("fwd_weight", 64, widths=(8, 4, 2, 1))
+
+
+# ---------------------------------------------------------------------------
+# Predicted variance vs Monte-Carlo (the numbers the solver ranks by)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("quantizer,bits,params,fn", [
+    ("psq", 8, {}, lambda x, k: quantize_psq_stoch(x, k, 8).dequant()),
+    ("bhq", 4, {"block_rows": 32},
+     lambda x, k: quantize_bhq_stoch(x, k, 4, block_rows=32).dequant()),
+    ("ptq", 2, {}, lambda x, k: quantize_ptq_stoch(x, k, 2).dequant()),
+])
+def test_variance_proxy_matches_monte_carlo(quantizer, bits, params, fn):
+    """The planner's per-site variance is quantizer_variance on a fixed
+    Gaussian proxy; Monte-Carlo on the same sample must agree."""
+    shape = (64, 32)
+    pred = _variance_proxy(shape, quantizer, bits, **params)
+    # the proxy is uncapped at this size: reconstruct its exact sample
+    x = jax.random.normal(jax.random.PRNGKey(0), shape, jnp.float32)
+    _, mc = empirical_mean_and_variance(jax.jit(fn), x,
+                                        jax.random.PRNGKey(5), 512)
+    assert pred > 0
+    # sqrt(2/512) ~ 6% MC noise on a variance estimate; allow 15%
+    assert abs(float(mc) - pred) < 0.15 * pred, (float(mc), pred)
+
+
+def test_candidates_are_pareto_and_legal():
+    sites = collect_plan_sites(CFG, PTQ8)
+    assert sites, "statquant-tx must expose quantized gradient GEMMs"
+    for s in sites:
+        assert s.role in ("wgrad", "agrad")
+        cands = site_candidates(s, PTQ8)
+        assert cands
+        for c in cands:
+            if s.role == "wgrad":
+                assert c.quantizer == "ptq"   # qt_gemm_tn needs per-tensor
+            assert c.bits in legal_widths(s.role, s.k,
+                                          partner_bits=s.partner_bits)
+        # Pareto: no candidate dominated on both axes
+        for a in cands:
+            assert not any(
+                o.variance <= a.variance and o.bytes_moved <= a.bytes_moved
+                and (o.variance < a.variance or o.bytes_moved < a.bytes_moved)
+                for o in cands)
+
+
+# ---------------------------------------------------------------------------
+# Solving
+# ---------------------------------------------------------------------------
+
+def test_plan_beats_uniform_at_equal_bytes():
+    """Paper Sec. 4: at the uniform-8-bit byte budget, mixing quantizer
+    families must strictly reduce predicted gradient variance."""
+    plan = plan_model(CFG, PTQ8)
+    assert plan.feasible
+    assert plan.total_bytes <= plan.baseline_bytes * (1 + 1e-9)
+    assert plan.total_variance < plan.baseline_variance
+    # the win comes from upgrading agrad sites beyond plain PTQ
+    assert any(e.role == "agrad" and e.quantizer != "ptq"
+               for e in plan.entries)
+
+
+def test_constrained_budget_downgrades_bits():
+    sites = collect_plan_sites(CFG, PTQ8)
+    tables = [site_candidates(s, PTQ8) for s in sites]
+    floor = sum(min(c.bytes_moved for c in t) for t in tables)
+    baseline = sum(s.bytes_at(8) for s in sites)
+    assert floor < baseline
+    budget = (floor + baseline) / 2
+    plan = plan_model(CFG, PTQ8, budget_bytes=budget)
+    assert plan.feasible
+    assert plan.total_bytes <= budget * (1 + 1e-9)
+    assert any(e.bits < 8 for e in plan.entries)
+
+
+def test_auto_solver_picks_best_of_greedy_and_dp():
+    """Forced DP solves a ceil-discretized (slightly tighter) budget, so
+    either solver can win near a steep variance cliff; ``auto`` must take
+    whichever is better, and neither may overshoot the budget."""
+    sites = collect_plan_sites(CFG, PTQ8)
+    tables = [site_candidates(s, PTQ8) for s in sites]
+    floor = sum(min(c.bytes_moved for c in t) for t in tables)
+    baseline = sum(s.bytes_at(8) for s in sites)
+    budget = (floor + baseline) / 2
+    pg = plan_model(CFG, PTQ8, budget_bytes=budget, solver="greedy")
+    pd = plan_model(CFG, PTQ8, budget_bytes=budget, solver="dp")
+    pa = plan_model(CFG, PTQ8, budget_bytes=budget, solver="auto")
+    assert pg.feasible and pd.feasible and pa.feasible
+    for p in (pg, pd, pa):
+        assert p.total_bytes <= budget * (1 + 1e-9)
+    best = min(pg.total_variance, pd.total_variance)
+    assert pa.total_variance <= best * (1 + 1e-9)
+
+
+def test_impossible_budget_flagged_not_crashed():
+    plan = plan_model(CFG, PTQ8, budget_bytes=1.0)
+    assert not plan.feasible
+    assert plan.total_bytes > plan.budget_bytes
+    # best-effort plan still shrinks everything it can
+    floor_bits = {min(c.bits for c in site_candidates(s, PTQ8))
+                  for s in collect_plan_sites(CFG, PTQ8)}
+    assert {e.bits for e in plan.entries} <= floor_bits
+
+
+# ---------------------------------------------------------------------------
+# Overrides JSON: plan -> policy -> audited model
+# ---------------------------------------------------------------------------
+
+def test_plan_roundtrips_through_policy_and_audit():
+    plan = plan_model(CFG, PTQ8)
+    doc = json.loads(plan.to_json())
+    assert doc["version"] == 1 and doc["feasible"]
+    overrides = overrides_from_json(doc)
+    policy = QuantPolicy.fqt("ptq", 8, overrides=overrides)
+    # resolved specs match the plan exactly
+    for e in plan.entries:
+        spec = getattr(policy.resolve(e.path), e.role)
+        assert spec is not None
+        assert (spec.name, spec.bits) == (e.quantizer, e.bits), e
+    # the planned policy passes the quantization-contract audit...
+    rep = audit_model(CFG, policy)
+    assert rep.ok, rep.format(verbose=True)
+    # ...and the soundness verifier
+    snd = check_model(CFG, policy)
+    assert snd.ok, snd.format(verbose=True)
+
+
+def test_cli_plan_writes_consumable_json(tmp_path, capsys):
+    from repro.analysis.__main__ import main
+    out = tmp_path / "plan.json"
+    rc = main(["plan", "--config", "statquant-tx", "--format", "json",
+               "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    saved = json.loads(out.read_text())
+    assert saved["overrides"] == doc["overrides"]
+    # exactly what launch/train.py --override-file does with the file
+    overrides = overrides_from_json(saved)
+    policy = QuantPolicy.fqt("bhq", 8, overrides=overrides)
+    first = saved["sites"][0]
+    spec = getattr(policy.resolve(first["path"]), first["role"])
+    assert (spec.name, spec.bits) == (first["quantizer"], first["bits"])
