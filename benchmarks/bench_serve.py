@@ -19,6 +19,18 @@ Three measurements, dumped to ``BENCH_serve.json``:
     bit-packed (kernels/pack.py) at 8/4/2 bits; >= 4x reduction at 4-bit
     is the acceptance bar (4-bit packs 2 codes/byte -> ~8x vs fp32, plus
     one affine pair per tensor/layer).
+  * ``paged`` — the paged engine (serve/paged.py): throughput/latency rows
+    next to the dense-slot ones; an *equal-HBM residency* run (a paged
+    pool of exactly the dense engine's KV bytes serving twice the lanes —
+    peak concurrently-resident requests is the acceptance number, >= 2x);
+    and a **Poisson open-loop overload** run — arrivals at ~2x the
+    measured service rate on a virtual clock assembled from measured step
+    wall times, reporting per-request p50/p95/p99 latency and page-pool
+    utilization, with speculative decode off and on.  The Poisson
+    percentiles characterize a latency *distribution* under a fixed
+    arrival seed, not a head-to-head comparison, so they are single-pass
+    (min-of-iters does not apply); the service-rate estimate feeding
+    lambda is itself a full closed-loop drain.
 
 Throughput/latency are min-of-iters: each variant's timed workload runs
 ``ITERS`` times and the best iteration is reported, so one scheduler hiccup
@@ -35,6 +47,7 @@ from __future__ import annotations
 
 import json
 import os
+import time
 
 import jax
 import jax.numpy as jnp
@@ -54,6 +67,10 @@ MAX_NEW = 16
 REQUESTS_PER_SLOT = 3
 ITERS = 3                      # timed repeats per variant; best one reported
 HBM_BUDGET = 64 << 30          # 64 GiB: the resident-slot arithmetic budget
+PAGE_SIZE = 8
+N_POISSON = 32                 # completed requests per open-loop pass
+POISSON_MAX_NEW = 8
+OVERLOAD = 2.0                 # arrival rate as a multiple of service rate
 
 
 def _submit_workload(eng, cfg, n_requests: int, seed: int = 0):
@@ -65,10 +82,11 @@ def _submit_workload(eng, cfg, n_requests: int, seed: int = 0):
 
 
 def _run_variant(cfg, params, kv_quant: bool, slots: int,
-                 weight_bits=None) -> dict:
+                 weight_bits=None, paged: bool = False, **paged_kw) -> dict:
+    kw = dict(page_size=PAGE_SIZE, **paged_kw) if paged else {}
     eng = ServeEngine(cfg, params, policy=QuantPolicy.qat(), slots=slots,
                       max_seq=MAX_SEQ, kv_quant=kv_quant, seed=0,
-                      weight_bits=weight_bits)
+                      weight_bits=weight_bits, paged=paged, **kw)
     # warmup drain: compiles the decode step + the prefill/insert buckets
     _submit_workload(eng, cfg, slots, seed=1)
     eng.run()
@@ -88,7 +106,7 @@ def _run_variant(cfg, params, kv_quant: bool, slots: int,
     n_tok = sum(len(c.tokens) for c in out.values())
     row = {
         "slots": slots,
-        "kv": "int8" if kv_quant else "fp32",
+        "kv": ("paged_int8" if paged else "int8") if kv_quant else "fp32",
         "requests": len(out),
         "tokens": n_tok,
         "iters": ITERS,
@@ -98,7 +116,116 @@ def _run_variant(cfg, params, kv_quant: bool, slots: int,
     }
     if weight_bits is not None:
         row["weight_bits"] = weight_bits
+    if paged:
+        row["pool"] = eng.pool_stats()
+        if eng.spec_decode:
+            row["spec"] = eng.spec_stats.as_dict()
     return row
+
+
+def _paged_residency_record(cfg, params, dense_slots: int = 4) -> dict:
+    """Equal-HBM residency: give the paged engine EXACTLY the dense
+    engine's KV byte budget (``dense_slots * max_seq`` rows, garbage page
+    included) but twice the decode lanes, and drive a short-request
+    workload through it.  The dense engine can never hold more than
+    ``dense_slots`` requests in that budget — every lane pins ``max_seq``
+    rows whether used or not; the paged engine holds whatever actually
+    fits, and the measured peak concurrent residency is the acceptance
+    number (>= 2x)."""
+    nb = MAX_SEQ // PAGE_SIZE
+    pool_pages = dense_slots * nb          # total rows == dense engine's
+    eng = ServeEngine(cfg, params, policy=QuantPolicy.qat(),
+                      slots=2 * dense_slots, max_seq=MAX_SEQ, kv_quant=True,
+                      seed=0, paged=True, page_size=PAGE_SIZE,
+                      pages=pool_pages)
+    rng = np.random.RandomState(7)
+    for _ in range(4 * dense_slots):
+        plen = int(rng.randint(4, 13))
+        eng.submit(rng.randint(0, cfg.vocab_size, size=plen), max_new=8)
+    peak_resident = 0
+    while eng.queued or eng.active_slots:
+        eng.step()
+        peak_resident = max(peak_resident, eng.active_slots)
+    eng.run()
+    stats = eng.pool_stats()
+    return {
+        "dense_resident_at_equal_hbm": dense_slots,
+        "paged_peak_resident": peak_resident,
+        "resident_ratio": peak_resident / dense_slots,
+        "pool_rows": pool_pages * PAGE_SIZE,
+        "dense_rows": dense_slots * MAX_SEQ,
+        "peak_page_utilization": stats["peak_utilization"],
+        "preemptions": stats["preemptions"],
+    }
+
+
+def _poisson_record(cfg, params, spec: bool) -> dict:
+    """Open-loop Poisson arrivals at ``OVERLOAD``x the measured service
+    rate, on a virtual clock: each engine step advances the clock by its
+    measured wall time, and a request's latency is completion time minus
+    its (virtual) arrival time.  Sustained overload means the backlog
+    grows and the tail percentiles reflect queueing, not just service."""
+    eng = ServeEngine(cfg, params, policy=QuantPolicy.qat(), slots=4,
+                      max_seq=MAX_SEQ, kv_quant=True, seed=0, paged=True,
+                      page_size=PAGE_SIZE, spec_decode=spec, spec_k=3)
+    rng = np.random.RandomState(11)
+
+    def prompt():
+        return rng.randint(0, cfg.vocab_size, size=int(rng.randint(4, 13)))
+
+    # warmup + service-rate estimate: closed-loop drain of a full pool
+    for _ in range(8):
+        eng.submit(prompt(), max_new=POISSON_MAX_NEW)
+    eng.run()
+    t0 = time.perf_counter()
+    for _ in range(12):
+        eng.submit(prompt(), max_new=POISSON_MAX_NEW)
+    eng.run()
+    service_rate = 12 / (time.perf_counter() - t0)     # requests / sec
+
+    lam = OVERLOAD * service_rate
+    arrivals = np.cumsum(rng.exponential(1.0 / lam, size=N_POISSON))
+    eng.spec_stats = type(eng.spec_stats)()            # reset accounting
+    eng.page_usage.clear()
+    now, submitted, seen = 0.0, 0, set()
+    arrival_of, latencies = {}, []
+    while len(latencies) < N_POISSON:
+        while submitted < N_POISSON and arrivals[submitted] <= now:
+            rid = eng.submit(prompt(), max_new=POISSON_MAX_NEW)
+            arrival_of[rid] = arrivals[submitted]
+            submitted += 1
+        if not eng.active_slots and not eng.queued:
+            if submitted >= N_POISSON:
+                break                                  # nothing left to do
+            now = arrivals[submitted]                  # idle: jump ahead
+            continue
+        t0 = time.perf_counter()
+        eng.step()
+        now += time.perf_counter() - t0
+        for rid in eng.completions():
+            if rid not in seen:
+                seen.add(rid)
+                latencies.append(now - arrival_of[rid])
+    eng.run()                                          # drain + clear
+    lat = np.asarray(latencies) * 1e3                  # ms
+    stats = eng.pool_stats()
+    rec = {
+        "spec_decode": spec,
+        "requests": N_POISSON,
+        "service_rate_req_per_s": service_rate,
+        "arrival_rate_req_per_s": lam,
+        "overload": OVERLOAD,
+        "latency_p50_ms": float(np.percentile(lat, 50)),
+        "latency_p95_ms": float(np.percentile(lat, 95)),
+        "latency_p99_ms": float(np.percentile(lat, 99)),
+        "mean_page_utilization": stats["mean_utilization"],
+        "peak_page_utilization": stats["peak_utilization"],
+        "preemptions": stats["preemptions"],
+        "prefix_hits": stats["prefix_hits"],
+    }
+    if spec:
+        rec["spec"] = eng.spec_stats.as_dict()
+    return rec
 
 
 def _memory_record(cfg) -> dict:
@@ -208,6 +335,30 @@ def run():
     rows.append(("serve/int8_slots=4_w4", v["p50_ms"] * 1e3,
                  v["tok_per_sec"]))
 
+    # paged engine: throughput rows, equal-HBM residency, Poisson overload
+    paged_variants = []
+    for slots in SLOT_COUNTS:
+        v = _run_variant(cfg, params, True, slots, paged=True)
+        paged_variants.append(v)
+        rows.append((f"serve/paged_int8_slots={slots}", v["p50_ms"] * 1e3,
+                     v["tok_per_sec"]))
+    v = _run_variant(cfg, params, True, 4, paged=True, spec_decode=True,
+                     spec_k=3)
+    paged_variants.append(v)
+    rows.append(("serve/paged_int8_slots=4_spec", v["p50_ms"] * 1e3,
+                 v["tok_per_sec"]))
+    residency = _paged_residency_record(cfg, params)
+    poisson = {"spec_off": _poisson_record(cfg, params, spec=False),
+               "spec_on": _poisson_record(cfg, params, spec=True)}
+    record["paged"] = {"page_size": PAGE_SIZE, "variants": paged_variants,
+                       "residency": residency, "poisson": poisson}
+    rows.append(("serve/paged_poisson_p99_off",
+                 poisson["spec_off"]["latency_p99_ms"] * 1e3,
+                 residency["resident_ratio"]))
+    rows.append(("serve/paged_poisson_p99_on",
+                 poisson["spec_on"]["latency_p99_ms"] * 1e3,
+                 poisson["spec_on"]["spec"]["acceptance_rate"]))
+
     ratio = record["memory"]["slot_ratio_int8_over_fp32"]
     w4 = record["weight_memory"]["packed"]["4"]["reduction_vs_fp32"]
     record["acceptance"] = {
@@ -215,6 +366,7 @@ def run():
         "packed_w4_reduction_ge_4x": w4 >= 4.0,
         "parity_all_backends": all(v["pass"]
                                    for v in record["parity"].values()),
+        "paged_resident_ge_2x": residency["resident_ratio"] >= 2.0,
     }
     with open(BENCH_JSON, "w") as f:
         json.dump(record, f, indent=1)

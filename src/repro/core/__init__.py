@@ -12,7 +12,7 @@ from .exempt import (clear_exemptions, exemption_registry, fp_exempt,
                      quant_scope)
 from .fqt import fqt_matmul
 from .kv_cache import (dequant_kv_rows, kv_cache_bytes_per_row,
-                       quantize_kv_rows)
+                       kv_fresh_code, quantize_kv_rows)
 from .policy import EXACT, FQT8_BHQ, QAT, QuantPolicy, RoleOverride
 from .quantizers import (QTensor, dynamic_range, num_bins,
                          psq_variance_bound, ptq_variance_bound,
@@ -39,6 +39,7 @@ __all__ = [
     "sr_variance_exact", "bhq_exact_variance",
     # int8 KV-cache codec (core/kv_cache.py, serving decode path)
     "quantize_kv_rows", "dequant_kv_rows", "kv_cache_bytes_per_row",
+    "kv_fresh_code",
     "compressed_psum", "compressed_grad_allreduce",
     "compression_variance_bound",
     # backend seam (core/backend.py — the single source of epilogue algebra)

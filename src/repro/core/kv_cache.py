@@ -36,9 +36,20 @@ import jax.numpy as jnp
 from ..kernels.kv_dequant import kv_dequant_rows
 from .quantizers import num_bins
 
-__all__ = ["quantize_kv_rows", "dequant_kv_rows", "kv_cache_bytes_per_row"]
+__all__ = ["quantize_kv_rows", "dequant_kv_rows", "kv_cache_bytes_per_row",
+           "kv_fresh_code"]
 
 _EPS = 1e-12
+
+
+def kv_fresh_code(bits: int = 8) -> int:
+    """The shifted-signed code a freshly allocated / padded row must hold so
+    it dequantizes to *exactly* zero under the fresh affine pair
+    ``(scale=1, zero=0)``: ``c8 = -2^(b-1)`` gives ``(c8 + 2^(b-1))/1 + 0 =
+    0.0`` bit-exactly.  Cache and page-pool constructors fill codes with
+    this value (a code of 0 would dequantize to ``2^(b-1)``, leaking large
+    finite garbage into any path that reads an unwritten row)."""
+    return -(1 << (bits - 1))
 
 
 def quantize_kv_rows(x: jax.Array, bits: int = 8):
@@ -65,7 +76,15 @@ def dequant_kv_rows(codes8: jax.Array, scale: jax.Array, zero: jax.Array,
 
     codes8: (..., D) int8; scale/zero: (...,) matching the leading axes.
     Returns (..., D) f32.
+
+    ``scale`` is clamped to ``_EPS`` before the divide: a zero (or negative)
+    scale can only come from a degenerate row — an all-zero freshly
+    allocated page, a zero-filled checkpoint, a hand-built cache — and
+    dividing by it would turn one bad row into inf/nan that poisons the
+    whole attention softmax.  Clamped, the degenerate row dequantizes to
+    huge-but-finite values the position mask can still hide.
     """
+    scale = jnp.maximum(scale.astype(jnp.float32), _EPS)
     if backend == "pallas":
         from .backend import resolve_interpret   # late: avoids import cycle
         d = codes8.shape[-1]

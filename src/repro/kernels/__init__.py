@@ -6,6 +6,7 @@
   fused_fqt.py     quantize -> GEMM -> epilogue megakernels (no HBM codes)
   quantize_sr.py   fused dynamic-range + scale + stochastic-round quantize
   kv_dequant.py    fused affine dequantize of int8 KV-cache rows
+  kv_gather.py     block-table page gather + dequantize (paged serving)
   autotune.py      tile-shape autotuner + persisted per-shape cache
   ops.py           wrappers wiring kernels to the quantizer algebra
   ref.py           pure-jnp oracles (the allclose targets)
@@ -22,6 +23,7 @@ from .fused_fqt import (fused_qboth_tn_matmul, fused_qboth_tn_matmul_xla,
                         fused_qlhs_packed_matmul,
                         fused_qlhs_packed_matmul_xla)
 from .kv_dequant import kv_dequant_rows
+from .kv_gather import kv_gather_pages, kv_gather_pages_xla
 from .pack import (PackedTensor, codes_per_byte, max_safe_k_packed,
                    pack_codes, pack_qtensor, packed_nbytes, unpack_codes)
 from .q4_matmul import packed_matmul, packed_matmul_xla
@@ -30,6 +32,7 @@ from .quantize_sr import quantize_sr_rows, quantize_sr_tensor
 
 __all__ = [
     "q8_matmul", "quantize_sr_rows", "quantize_sr_tensor", "kv_dequant_rows",
+    "kv_gather_pages", "kv_gather_pages_xla",
     "fused_qlhs_matmul", "fused_qlhs_matmul_xla", "fused_qboth_tn_matmul",
     "fused_qboth_tn_matmul_xla", "fused_qlhs_packed_matmul",
     "fused_qlhs_packed_matmul_xla", "autotune", "lookup_tiles",

@@ -117,6 +117,10 @@ KERNEL_SPECS: Dict[str, Dict[str, object]] = {
     "fused_dx": {"kind": "fused_lhs", "multiples": (8, 128, 128)},
     "fused_dw": {"kind": "fused_tn", "multiples": (128, 128, 8)},
     "kv_dequant": {"kind": "rows", "multiples": (8, 0, 0)},
+    # paged-pool gather twin of kv_dequant (kernels/kv_gather.py): bm is the
+    # rows-per-page-step block, clamped to a divisor of the page size at
+    # trace time, so the same "rows" validation applies
+    "kv_gather": {"kind": "rows", "multiples": (8, 0, 0)},
     # bit-packed weight family (kernels/q4_matmul.py + the packed variant in
     # kernels/fused_fqt.py); cache keys carry the code width as the dtype
     # segment (int4/int2/int1) since the packed byte layout changes with it
@@ -228,6 +232,7 @@ SHIPPED_DEFAULTS: Dict[str, Tiles] = {
     "fused_dw/4096x1024x1024": (128, 512, 256),
     "fused_dw/1024x4096x4096": (128, 512, 256),
     "kv_dequant/rows": (256, 0, 0),
+    "kv_gather/rows": (256, 0, 0),
     # packed-weight family: the int32 unpack intermediate (4*bk*bn) is the
     # dominant VMEM term, so bk stays at 512 where q8_matmul could afford
     # 1024

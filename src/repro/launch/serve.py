@@ -6,7 +6,9 @@ deterministic forward quantizers; no gradient path.  The engine
 at full static batch, per-request prefill, EOS/length eviction — and the
 optional int8 KV cache; this module parses arguments, builds (or restores)
 the parameters, submits a mixed-length synthetic workload, and reports
-throughput + per-token latency percentiles.
+throughput + per-token latency percentiles.  ``--paged`` swaps in the
+paged-pool engine (block tables, prefix reuse, chunked prefill, optional
+``--spec-decode`` self-speculative decoding — serve/paged.py).
 
 ``generate`` is the legacy static-batch helper (prefill once, decode the
 whole batch in lockstep) kept for the examples; it now stops early once
@@ -93,6 +95,24 @@ def main(argv=None):
     ap.add_argument("--temperature", type=float, default=0.0,
                     help="<= 0 => greedy")
     ap.add_argument("--top-k", type=int, default=0, help="<= 0 => disabled")
+    ap.add_argument("--top-p", type=float, default=0.0,
+                    help="nucleus sampling mass; outside (0,1) => disabled")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged int8 KV engine (serve/paged.py): shared "
+                         "page pool + block tables + prefix reuse instead "
+                         "of one max-seq lane per slot")
+    ap.add_argument("--page-size", type=int, default=8,
+                    help="rows per KV page (paged mode)")
+    ap.add_argument("--pages", type=int, default=None,
+                    help="page-pool size; default sizes for slots lanes")
+    ap.add_argument("--prefill-chunk", type=int, default=None,
+                    help="chunked-prefill width (paged mode); default = "
+                         "whole-prompt prefill")
+    ap.add_argument("--spec-decode", action="store_true",
+                    help="self-speculative decoding (paged mode): draft = "
+                         "same params under an aggressive low-bit policy")
+    ap.add_argument("--spec-k", type=int, default=3,
+                    help="draft tokens proposed per verify step")
     ap.add_argument("--eos", type=int, default=None,
                     help="EOS token id (evicts the slot on emission)")
     ap.add_argument("--kv-cache", choices=["int8", "fp32"], default="int8",
@@ -118,17 +138,25 @@ def main(argv=None):
     cfg = get_config(args.arch, smoke=args.smoke)
     policy = QuantPolicy.qat(backend=args.backend)  # fwd-only quantization
     kv_quant = args.kv_cache == "int8"
+    if args.paged and not kv_quant:
+        ap.error("--paged requires --kv-cache int8 (pages store the codec)")
+    for flag, name in ((args.spec_decode, "--spec-decode"),
+                       (args.prefill_chunk, "--prefill-chunk"),
+                       (args.pages, "--pages")):
+        if flag and not args.paged:
+            ap.error(f"{name} needs --paged")
+    kw = dict(policy=policy, slots=args.slots, max_seq=args.max_seq,
+              kv_quant=kv_quant, eos_id=args.eos, seed=args.seed,
+              weight_bits=args.weight_bits)
+    if args.paged:
+        kw.update(paged=True, page_size=args.page_size, pages=args.pages,
+                  prefill_chunk=args.prefill_chunk,
+                  spec_decode=args.spec_decode, spec_k=args.spec_k)
     if args.ckpt_dir:
-        eng = ServeEngine.from_checkpoint(
-            cfg, args.ckpt_dir, policy=policy, slots=args.slots,
-            max_seq=args.max_seq, kv_quant=kv_quant, eos_id=args.eos,
-            seed=args.seed, weight_bits=args.weight_bits)
+        eng = ServeEngine.from_checkpoint(cfg, args.ckpt_dir, **kw)
     else:
         params = build_model(cfg).init(jax.random.PRNGKey(args.seed))
-        eng = ServeEngine(cfg, params, policy=policy, slots=args.slots,
-                          max_seq=args.max_seq, kv_quant=kv_quant,
-                          eos_id=args.eos, seed=args.seed,
-                          weight_bits=args.weight_bits)
+        eng = ServeEngine(cfg, params, **kw)
 
     if args.weight_bits is not None:
         from ..serve.engine import weight_nbytes
@@ -153,7 +181,8 @@ def main(argv=None):
         plen = int(rng.randint(lo, hi + 1))
         prompt = rng.randint(0, cfg.vocab_size, size=plen)
         eng.submit(prompt, max_new=args.max_new,
-                   temperature=args.temperature, top_k=args.top_k)
+                   temperature=args.temperature, top_k=args.top_k,
+                   top_p=args.top_p)
 
     t0 = time.time()
     completions = eng.run()
@@ -169,6 +198,16 @@ def main(argv=None):
     for c in completions.values():
         by_reason[c.reason] = by_reason.get(c.reason, 0) + 1
     print(f"[serve] finish reasons: {by_reason}")
+    if args.paged:
+        st = eng.pool_stats()
+        print(f"[serve] paged: {st['pages_in_use']}/{st['n_pages']} pages "
+              f"resident (peak {st['peak_pages_in_use']}), "
+              f"prefix hits {st['prefix_hits']}, cow {st['cow_copies']}, "
+              f"preemptions {st['preemptions']}")
+        if args.spec_decode:
+            sp = eng.spec_stats
+            print(f"[serve] spec: {sp.spec_steps} rounds, acceptance "
+                  f"{sp.acceptance_rate:.2f}, {sp.emitted} tokens emitted")
     if completions:
         rid0 = min(completions)
         print("[serve] sample:", completions[rid0].tokens[:16])

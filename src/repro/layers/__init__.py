@@ -1,7 +1,8 @@
 """Layer zoo — every GEMM routes through repro.core.fqt."""
 
 from .attention import (attention, cross_attention_kv, decode_attention,
-                        init_attention, init_kv_cache, init_kv_cache_quant)
+                        init_attention, init_kv_cache, init_kv_cache_quant,
+                        init_paged_kv_pool, paged_decode_attention)
 from .common import dense, init_dense, qkey
 from .embeddings import (apply_mrope, apply_rope, embed, init_embedding,
                          init_lm_head, lm_head, sinusoidal_positions)

@@ -17,12 +17,14 @@ import jax
 import jax.numpy as jnp
 
 from ..configs.base import ArchConfig
-from ..core import QuantPolicy, fp_exempt, get_quantizer, resolve_kv_cache_spec
+from ..core import (QuantPolicy, fp_exempt, get_quantizer, kv_fresh_code,
+                    resolve_kv_cache_spec)
 from .common import dense, init_dense
 from .embeddings import apply_mrope, apply_rope
 
 __all__ = ["init_attention", "attention", "decode_attention",
-           "init_kv_cache", "init_kv_cache_quant", "cross_attention_kv"]
+           "init_kv_cache", "init_kv_cache_quant", "cross_attention_kv",
+           "init_paged_kv_pool", "paged_decode_attention"]
 
 _NEG = -1e30
 
@@ -149,20 +151,49 @@ def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
     }
 
 
-def init_kv_cache_quant(cfg: ArchConfig, batch: int, max_seq: int) -> dict:
+def init_kv_cache_quant(cfg: ArchConfig, batch: int, max_seq: int,
+                        bits: int = 8) -> dict:
     """int8-quantized KV cache (core/kv_cache.py codec): each of k/v stores
     shifted-signed int8 codes plus one (scale, zero) pair per (batch,
     position) row — ~4x less HBM per resident slot than the fp32 cache.
 
-    Scales initialize to 1 (not 0) so untouched rows dequantize to finite
-    values; they are masked out of attention by the position mask anyway.
+    Fresh rows must dequantize to *exact* zeros (scale=1, zero=0, codes at
+    ``kv_fresh_code`` = the shifted-signed zero point): the paged engine
+    gathers unwritten pool rows and relies on ``0 * masked_prob == 0`` — a
+    scale of 0 here would turn the masked garbage into inf/nan and poison
+    the softmax of every co-resident slot.
     """
     flat = cfg.n_kv_heads * cfg.hd
+    fresh = kv_fresh_code(bits)
 
     def one():
-        return {"codes": jnp.zeros((batch, max_seq, flat), jnp.int8),
+        return {"codes": jnp.full((batch, max_seq, flat), fresh, jnp.int8),
                 "scale": jnp.ones((batch, max_seq), jnp.float32),
                 "zero": jnp.zeros((batch, max_seq), jnp.float32)}
+    return {"k": one(), "v": one()}
+
+
+def init_paged_kv_pool(cfg: ArchConfig, n_pages: int, page_size: int,
+                       bits: int = 8) -> dict:
+    """One layer's shared page pool for the paged serving engine: the int8
+    KV codec of :func:`init_kv_cache_quant` laid out as ``n_pages`` fixed
+    ``page_size``-row pages instead of per-slot lanes.  Physical pages are
+    handed to requests by the host-side allocator (serve/paged.py); this
+    tensor never knows which request owns which page.
+
+    Fresh pages dequantize to exact zeros (``kv_fresh_code`` + scale 1) —
+    the gather path reads *every* table entry, including never-written
+    garbage pages, and masked positions only stay harmless if their values
+    are finite (``0 * inf`` would be NaN in the value mix).
+    """
+    flat = cfg.n_kv_heads * cfg.hd
+    fresh = kv_fresh_code(bits)
+
+    def one():
+        return {"codes": jnp.full((n_pages, page_size, flat), fresh,
+                                  jnp.int8),
+                "scale": jnp.ones((n_pages, page_size), jnp.float32),
+                "zero": jnp.zeros((n_pages, page_size), jnp.float32)}
     return {"k": one(), "v": one()}
 
 
@@ -233,3 +264,92 @@ def decode_attention(p: dict, x: jax.Array, cache: dict, index: jax.Array,
     y = dense(p["wo"], out.reshape(B, 1, H * hd), key, policy, 4,
               f"{path}.wo")
     return y, cache
+
+
+def paged_decode_attention(p: dict, x: jax.Array, pool: dict,
+                           table: jax.Array, start: jax.Array, key,
+                           policy: QuantPolicy, cfg: ArchConfig,
+                           path: str = "attn", kv_quant=None):
+    """Multi-token attention step over a paged int8 KV pool. x: (B, C, d).
+
+    The one compute primitive of the paged serving engine — ``C`` is what
+    varies by use, not the code path:
+
+      * ``C = 1``      plain continuous-batching decode
+      * ``C = chunk``  one chunked-prefill slab (long prompts stream in)
+      * ``C = k + 1``  the speculative-decode verify pass
+
+    ``pool``: one layer of :func:`init_paged_kv_pool`; ``table``: (B, nb)
+    int32 physical page ids in logical-block order (pad unallocated blocks
+    with the engine's garbage page); ``start``: (B,) int32 position of each
+    row's first token.  Row ``c`` writes position ``start + c`` into its
+    page (quantize-on-write, same codec as the dense decode path), then the
+    whole table is gathered + dequantized — the Pallas backend streams
+    pages via the block-table-prefetch kernel (kernels/kv_gather.py),
+    simulate/native run its XLA twin — and position ``start + c`` attends
+    over everything ``<= start + c``.  Because the chunk's own rows are
+    scattered before the gather, intra-chunk causality falls out of the
+    same position mask, and a ``C = 1`` step is arithmetically identical to
+    the dense-lane :func:`decode_attention` step.
+
+    Positions are clamped to the table's span ``nb * P - 1``; clamped
+    (padding) rows write garbage to the last row, which stays masked until
+    a real token is fed at that position — and that write happens before
+    the mask ever exposes it.
+
+    Returns (y (B, C, d_model), new pool).
+    """
+    B, C, _ = x.shape
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    G = H // KV
+    nb = table.shape[1]
+    P = pool["k"]["codes"].shape[1]
+    S = nb * P
+    start = jnp.asarray(start, jnp.int32).reshape(B)
+    offs = start[:, None] + jnp.arange(C, dtype=jnp.int32)[None, :]  # (B, C)
+    positions = offs
+    if cfg.rope == "mrope":
+        positions = jnp.broadcast_to(positions[None], (3, B, C))
+    q, k_new, v_new = _qkv(p, x, key, policy, cfg, positions, path)
+
+    spec = resolve_kv_cache_spec(True if kv_quant is None else kv_quant)
+    qz = get_quantizer(spec.name)
+    bits = spec.bits or 8
+    flat = KV * hd
+    offs_w = jnp.minimum(offs, S - 1)
+    pids = jnp.take_along_axis(table, offs_w // P, axis=1)           # (B, C)
+    rows = offs_w % P
+
+    def put(side, rows_f):
+        codes, scale, zero = qz.quantize_rows(rows_f.reshape(B, C, flat),
+                                              bits)
+        return {"codes": side["codes"].at[pids, rows].set(codes),
+                "scale": side["scale"].at[pids, rows].set(scale),
+                "zero": side["zero"].at[pids, rows].set(zero)}
+    pool = {"k": put(pool["k"], k_new), "v": put(pool["v"], v_new)}
+
+    if policy.backend == "pallas":
+        from ..core.backend import resolve_interpret
+        from ..kernels.kv_gather import kv_gather_pages
+        interp = resolve_interpret(policy.pallas_interpret)
+
+        def get(side):
+            return kv_gather_pages(side["codes"], side["scale"],
+                                   side["zero"], table, bits=bits,
+                                   interpret=interp)
+    else:
+        from ..kernels.kv_gather import kv_gather_pages_xla
+
+        def get(side):
+            return kv_gather_pages_xla(side["codes"], side["scale"],
+                                       side["zero"], table, bits=bits)
+    k = get(pool["k"]).reshape(B, S, KV, hd).astype(x.dtype)
+    v = get(pool["v"]).reshape(B, S, KV, hd).astype(x.dtype)
+
+    mask = (jnp.arange(S, dtype=jnp.int32)[None, None, :]
+            <= offs[:, :, None])                             # (B, C, S)
+    mask = mask[:, None, None]                               # (B,1,1,C,S)
+    out = _sdpa(q.reshape(B, C, KV, G, hd), k, v, mask)
+    y = dense(p["wo"], out.reshape(B, C, H * hd), key, policy, 4,
+              f"{path}.wo")
+    return y, pool

@@ -68,11 +68,15 @@ class Model:
     init: Callable                    # key -> params
     loss: Callable                    # (params, batch, key, policy) -> (loss, metrics)
     prefill: Callable                 # (params, batch, policy, max_seq) -> (logits, cache)
-    decode: Callable                  # (params, cache, batch, policy, [positions]) -> (logits, cache)
+    decode: Callable                  # (params, cache, batch, policy, [pos]) -> (logits, cache)
     init_cache: Callable              # (cfg, batch, max_seq, dtype) -> cache
     # int8-KV variant of init_cache for serving (None where the family has
     # no transformer KV cache to quantize — see lm.init_lm_cache_quant)
     init_cache_quant: Callable = None
+    # paged-pool serving entry points (serve/paged.py); None where the
+    # family has no transformer KV cache to page
+    paged_decode: Callable = None     # (params, pool, batch, policy, table, start) -> (lg, pool)
+    init_paged_pool: Callable = None  # (cfg, n_pages, page_size) -> pool
 
     def quant_paths(self) -> tuple:
         """Logical paths of this model's quantized GEMMs (policy overrides
@@ -152,4 +156,9 @@ def build_model(cfg: ArchConfig) -> Model:
             params, cache, batch, policy, cfg, **kw),
         init_cache=lm.init_lm_cache,
         init_cache_quant=lm.init_lm_cache_quant if quantizable else None,
+        paged_decode=(
+            (lambda params, pool, batch, policy, table, start, **kw:
+             lm.lm_paged_decode(params, pool, batch, policy, cfg, table,
+                                start, **kw)) if quantizable else None),
+        init_paged_pool=lm.init_lm_paged_pool if quantizable else None,
     )

@@ -21,13 +21,14 @@ from ..layers import (apply_norm, attention, decode_attention, dense, embed,
                       init_attention, init_embedding, init_kv_cache,
                       init_kv_cache_quant, init_lm_head, init_mamba2_layer,
                       init_mamba2_state, init_mlp, init_moe, init_norm,
-                      init_rwkv_layer, init_rwkv_state, lm_head,
-                      mamba2_decode_step, mamba2_layer, mlp, moe_block,
-                      rwkv_decode_step, rwkv_layer)
+                      init_paged_kv_pool, init_rwkv_layer, init_rwkv_state,
+                      lm_head, mamba2_decode_step, mamba2_layer, mlp,
+                      moe_block, paged_decode_attention, rwkv_decode_step,
+                      rwkv_layer)
 
 __all__ = ["init_lm_params", "lm_loss", "lm_prefill", "lm_decode",
            "init_lm_cache", "init_lm_cache_quant", "cross_entropy",
-           "scan_or_loop"]
+           "scan_or_loop", "init_lm_paged_pool", "lm_paged_decode"]
 
 
 def scan_or_loop(body, carry, xs, unroll: bool):
@@ -379,6 +380,59 @@ def init_lm_cache_quant(cfg: ArchConfig, batch: int, max_seq: int):
     kv = jax.tree.map(lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
                       init_kv_cache_quant(cfg, batch, max_seq))
     return {"kv": kv, "index": jnp.zeros((batch,), jnp.int32)}
+
+
+def init_lm_paged_pool(cfg: ArchConfig, n_pages: int, page_size: int):
+    """Stacked ``(L, ...)`` paged int8 KV pool for the paged serving engine
+    (serve/paged.py): one shared set of ``n_pages`` physical pages per
+    layer, sliced alongside the layer stack by ``lax.scan``.  One block
+    table indexes all layers — page id ``i`` names row ``i`` of every
+    layer's pool, so the allocator hands out one id per logical block, not
+    one per (layer, block).
+    """
+    if cfg.family == "hybrid" or cfg.ssm_kind == "rwkv6":
+        raise ValueError(
+            f"{cfg.name}: paged KV pools need a transformer KV cache; "
+            f"family={cfg.family!r}/ssm_kind={cfg.ssm_kind!r} keeps dense "
+            f"recurrent state")
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape),
+        init_paged_kv_pool(cfg, n_pages, page_size))
+
+
+def lm_paged_decode(params, pool, batch, policy: QuantPolicy,
+                    cfg: ArchConfig, table, start, kv_quant=None):
+    """Paged multi-token forward: the engine's one compute primitive.
+
+    batch: ``tokens (B, C)``; ``table``: (B, nb) int32 block tables;
+    ``start``: (B,) int32 position of each row's first token.  ``C = 1`` is
+    plain decode, ``C = chunk`` is chunked prefill, ``C = k + 1`` is the
+    speculative verify — see :func:`repro.layers.paged_decode_attention`.
+    Returns (logits (B, C, Vp), new pool).
+    """
+    key = jax.random.PRNGKey(0)       # fwd quantizers are deterministic
+    h = _input_embed(params, batch, cfg).astype(jnp.float32)
+
+    def body(hh, xs):
+        lp, pool_l, lk = xs
+        x = apply_norm(lp["ln1"], hh, cfg.norm)
+        att, pool_l = paged_decode_attention(
+            lp["attn"], x, pool_l, table, start, lk, policy, cfg,
+            path="layers.attn", kv_quant=kv_quant)
+        hh = hh + att.astype(hh.dtype)
+        x = apply_norm(lp["ln2"], hh, cfg.norm)
+        if cfg.moe_experts:
+            y, _ = moe_block(lp["moe"], x, lk, policy, cfg,
+                             path="layers.moe")
+        else:
+            y = mlp(lp["mlp"], x, lk, policy, cfg.act, path="layers.mlp")
+        return hh + y.astype(hh.dtype), pool_l
+    keys = jax.random.split(key, cfg.n_layers)
+    h, pools = scan_or_loop(body, h, (params["layers"], pool, keys),
+                            cfg.unroll_scan)
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = lm_head(params["lm_head"], h, key, policy)
+    return logits, pools
 
 
 def lm_prefill(params, batch, policy: QuantPolicy, cfg: ArchConfig,

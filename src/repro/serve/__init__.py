@@ -1,7 +1,17 @@
-"""Serving: continuous-batching engine over the quantized decode path."""
+"""Serving: continuous-batching engines over the quantized decode path.
+
+Two engines share one scheduler surface: the dense-slot engine
+(serve/engine.py, one ``max_seq`` cache lane per slot) and the paged
+engine (serve/paged.py, ``ServeEngine(..., paged=True)`` — shared int8
+page pool, block tables, prefix reuse, chunked prefill, and optional
+self-speculative decode via serve/spec.py).
+"""
 
 from .engine import Completion, Request, ServeEngine
+from .paged import PagedServeEngine, PagePool, PrefixCache
 from .sampling import sample_tokens, slot_keys
+from .spec import SpecStats, default_draft_policy, greedy_accept
 
-__all__ = ["ServeEngine", "Request", "Completion", "sample_tokens",
-           "slot_keys"]
+__all__ = ["ServeEngine", "PagedServeEngine", "PagePool", "PrefixCache",
+           "Request", "Completion", "sample_tokens", "slot_keys",
+           "SpecStats", "default_draft_policy", "greedy_accept"]

@@ -124,6 +124,7 @@ class Request:
     max_new: int = 32
     temperature: float = 0.0           # <= 0 => greedy
     top_k: int = 0                     # <= 0 => disabled
+    top_p: float = 0.0                 # outside (0, 1) => disabled
     eos_id: Optional[int] = None
 
 
@@ -168,12 +169,27 @@ class ServeEngine:
 
     ``submit``/``run`` may be interleaved — ``run`` returns when the queue
     and every slot are empty; later submissions start a new drain.
+
+    ``paged=True`` swaps in the paged-pool engine (serve/paged.py): the
+    same scheduler surface over a shared page pool with block tables,
+    prefix reuse, chunked prefill, and optional speculative decode — and
+    token-for-token identical output at equal seeds under the default
+    single-chunk prefill.  Paged-only knobs (``page_size``, ``pages``,
+    ``prefill_chunk``, ``spec_decode``, ``spec_k``, ``draft_policy``) are
+    accepted only with ``paged=True``.
     """
+
+    def __new__(cls, *args, paged: bool = False, **kw):
+        if paged and cls is ServeEngine:
+            from .paged import PagedServeEngine  # late: paged imports us
+            return super().__new__(PagedServeEngine)
+        return super().__new__(cls)
 
     def __init__(self, cfg, params, *, policy: Optional[QuantPolicy] = None,
                  slots: int = 4, max_seq: int = 64, kv_quant=False,
                  eos_id: Optional[int] = None, seed: int = 0,
-                 weight_bits: Optional[int] = None):
+                 weight_bits: Optional[int] = None, paged: bool = False):
+        del paged                       # consumed by __new__ dispatch
         if cfg.family in ("vlm", "audio"):
             raise ValueError(
                 f"{cfg.name}: the serving engine drives token-input decoder "
@@ -220,9 +236,10 @@ class ServeEngine:
         self._prefill_fns: dict = {}
         self._insert_fns: dict = {}
         self._sample1 = jax.jit(
-            lambda lg, key, t, k: sample_tokens(
+            lambda lg, key, t, k, p: sample_tokens(
                 lg[None], key[None], jnp.float32(t)[None],
-                jnp.int32(k)[None], cfg.vocab_size)[0])
+                jnp.int32(k)[None], cfg.vocab_size,
+                jnp.float32(p)[None])[0])
 
     # -- construction ------------------------------------------------------
     @classmethod
@@ -251,13 +268,14 @@ class ServeEngine:
         return cache
 
     # -- the jitted full-batch decode step ---------------------------------
-    def _step_fn(self, params, cache, tok, pos, rids, counts, temp, topk):
+    def _step_fn(self, params, cache, tok, pos, rids, counts, temp, topk,
+                 topp):
         keys = slot_keys(self._base_key, rids, counts)
         logits, cache = self.model.decode(
             params, cache, {"tokens": tok[:, None]}, self.policy,
             positions=pos, kv_quant=self.kv_spec)
         nxt = sample_tokens(logits[:, -1], keys, temp, topk,
-                            self.cfg.vocab_size)
+                            self.cfg.vocab_size, topp)
         return cache, nxt
 
     # -- prefill + slot insertion (compiled per length bucket) -------------
@@ -322,7 +340,7 @@ class ServeEngine:
 
     # -- scheduler ---------------------------------------------------------
     def submit(self, prompt: Sequence[int], max_new: int = 32,
-               temperature: float = 0.0, top_k: int = 0,
+               temperature: float = 0.0, top_k: int = 0, top_p: float = 0.0,
                eos_id: Optional[int] = None) -> int:
         """Queue one request; returns its request id."""
         prompt = tuple(int(t) for t in prompt)
@@ -335,7 +353,7 @@ class ServeEngine:
         self._next_rid += 1
         self._queue.append(Request(
             rid=rid, prompt=prompt, max_new=max_new,
-            temperature=temperature, top_k=top_k,
+            temperature=temperature, top_k=top_k, top_p=top_p,
             eos_id=self.eos_id if eos_id is None else eos_id))
         return rid
 
@@ -372,7 +390,7 @@ class ServeEngine:
                 logits[0, -1], slot_keys(
                     self._base_key, jnp.asarray([req.rid], jnp.int32),
                     jnp.asarray([0], jnp.int32))[0],
-                req.temperature, req.top_k))
+                req.temperature, req.top_k, req.top_p))
             self._cache = self._insert(self._cache, kv, i, len(req.prompt))
             slot.req = req
             slot.pos = len(req.prompt)
@@ -397,6 +415,7 @@ class ServeEngine:
         counts = np.zeros((B,), np.int32)
         temp = np.zeros((B,), np.float32)
         topk = np.zeros((B,), np.int32)
+        topp = np.zeros((B,), np.float32)
         for i, slot in enumerate(self._slots):
             if not slot.active:
                 continue
@@ -406,11 +425,12 @@ class ServeEngine:
             counts[i] = len(slot.tokens)
             temp[i] = slot.req.temperature
             topk[i] = slot.req.top_k
+            topp[i] = slot.req.top_p
         t0 = time.perf_counter()
         self._cache, nxt = self._decode(
             self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos),
             jnp.asarray(rids), jnp.asarray(counts), jnp.asarray(temp),
-            jnp.asarray(topk))
+            jnp.asarray(topk), jnp.asarray(topp))
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
         emitted = 0

@@ -1,0 +1,792 @@
+"""Paged int8 KV serving: shared page pool, block tables, prefix reuse,
+chunked prefill, self-speculative low-bit decode.
+
+The dense-slot engine (serve/engine.py) pins ``max_seq`` cache rows per
+resident request — a request that generates 10 tokens against a 1024-row
+lane wastes 99% of its HBM reservation, and that internal fragmentation is
+what caps resident requests at scale.  This engine stores the same int8
+codec (core/kv_cache.py) as fixed-size **pages** in one shared pool:
+
+  * **pages + block tables** — a request owns a host-side list of physical
+    page ids (its block table); pages are allocated on first write and
+    freed on eviction, so a request's HBM footprint is
+    ``ceil(occupancy / page_size)`` pages, not ``max_seq`` rows.  Page 0 is
+    the engine's garbage page: inactive decode lanes and unallocated table
+    blocks point at it, its contents are finite-but-meaningless, and the
+    position mask hides every read of it.
+  * **gather decode** — the jitted step runs the paged multi-token forward
+    (models/lm.py ``lm_paged_decode``): quantize-on-write into the owning
+    page, then gather the whole table back — the Pallas backend streams
+    pages by block-table scalar prefetch (kernels/kv_gather.py), other
+    backends run its XLA twin.  A one-token step is arithmetically
+    identical to the dense lane step, so ``paged=True`` is token-for-token
+    identical to the dense engine at equal seeds (same slots, default
+    single-chunk prefill, spec decode off).
+  * **prefix reuse** — prompt pages are hash-consed: at prefill completion
+    every full-page prompt boundary (and the partial tail) registers
+    ``prompt[:m] -> pages`` with a refcount per page.  A later prompt
+    adopts the longest registered prefix: full pages are shared read-only
+    (refcount++), a partial boundary page is **copied on write** (the
+    divergence point gets a private copy), and prefill restarts at ``m``
+    instead of 0 — a common system prompt is stored once across all
+    requests, and never recomputed.
+  * **chunked prefill** — prompts longer than ``prefill_chunk`` stream in
+    fixed-size chunks, one chunk per engine step, interleaved with decode
+    (the chunk and the decode batch are separate forwards, but no prompt
+    ever monopolizes the pool for multiple steps).  A chunk is the same
+    paged forward with ``C = prefill_chunk``.
+  * **speculative decode** — ``spec_decode=True`` runs serve/spec.py's
+    propose/verify loop: the draft is the SAME parameters under an
+    aggressive low-bit policy, so k draft steps + 1 verify forward emit up
+    to ``k + 1`` exact target-greedy tokens per round.
+  * **preemption** — when the pool runs dry the youngest request is
+    preempted: its private pages are freed and it re-queues (front) with
+    its generated tokens carried, to be re-prefilled later.  Sampling keys
+    depend only on ``(seed, rid, token index)``, so a preempted-and-resumed
+    request finishes with the tokens it would have had anyway.
+
+HBM arithmetic (the fragmentation win the bench records): at equal pool
+bytes the dense engine holds ``slots`` requests, each pinning ``max_seq``
+rows; this engine holds ``slots`` *lanes* over ``slots * max_seq / P``
+pages and admits as many requests as actually-written pages fit — with
+typical occupancy below half of ``max_seq``, twice the resident requests
+at equal HBM.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import Counter, OrderedDict, deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import quantize_kv_rows
+from .engine import ServeEngine, _Slot
+from .sampling import sample_tokens, slot_keys
+from .spec import SpecStats, default_draft_policy, greedy_accept
+
+__all__ = ["PagePool", "PrefixCache", "PagedServeEngine"]
+
+GARBAGE_PAGE = 0
+
+
+def _ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+class PagePool:
+    """Host-side allocator for the shared device page pool: a free list +
+    per-page refcounts.  Page 0 (``GARBAGE_PAGE``) is reserved — never
+    allocated, never freed — as the write/read target of inactive lanes.
+
+    Refcount protocol: ``alloc`` returns a page at refcount 1 (owned by the
+    caller); sharing (a second block table, a prefix-cache entry) takes
+    ``incref``; every owner releases with ``decref``, and the page returns
+    to the free list when the count hits 0.  Pages with refcount > 1 are
+    shared and must be treated read-only past their valid rows (the
+    copy-on-write rule lives in the engine).
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError(f"n_pages={n_pages}: need at least the garbage "
+                             f"page plus one allocatable page")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        self.refs = np.zeros((n_pages,), np.int32)
+        self._free: deque = deque(range(1, n_pages))
+        self.peak_in_use = 0
+
+    # -- allocation --------------------------------------------------------
+    def alloc(self) -> Optional[int]:
+        if not self._free:
+            return None
+        pid = self._free.popleft()
+        self.refs[pid] = 1
+        self.peak_in_use = max(self.peak_in_use, self.in_use)
+        return pid
+
+    def incref(self, pid: int) -> None:
+        if pid == GARBAGE_PAGE:
+            return
+        assert self.refs[pid] > 0, f"incref on free page {pid}"
+        self.refs[pid] += 1
+
+    def decref(self, pid: int) -> None:
+        if pid == GARBAGE_PAGE:
+            return
+        assert self.refs[pid] > 0, f"decref on free page {pid}"
+        self.refs[pid] -= 1
+        if self.refs[pid] == 0:
+            self._free.append(pid)
+
+    # -- accounting --------------------------------------------------------
+    @property
+    def num_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def in_use(self) -> int:
+        return self.n_pages - 1 - len(self._free)
+
+    @property
+    def utilization(self) -> float:
+        return self.in_use / max(self.n_pages - 1, 1)
+
+    def check(self, tables: List[List[int]],
+              registry_pages: List[Tuple[int, ...]]) -> None:
+        """Invariant check (tests): recompute every page's expected
+        refcount from the live block tables + registry entries and compare;
+        also verify free pages carry refcount 0 and are not referenced."""
+        expect = np.zeros_like(self.refs)
+        for table in tables:
+            for pid in table:
+                if pid != GARBAGE_PAGE:
+                    expect[pid] += 1
+        for pages in registry_pages:
+            for pid in pages:
+                expect[pid] += 1
+        if not np.array_equal(expect, self.refs):
+            bad = np.nonzero(expect != self.refs)[0]
+            raise AssertionError(
+                f"refcount drift on pages {bad.tolist()}: expected "
+                f"{expect[bad].tolist()}, have {self.refs[bad].tolist()}")
+        free = set(self._free)
+        assert len(free) == len(self._free), "free list holds duplicates"
+        for pid in free:
+            assert self.refs[pid] == 0, f"free page {pid} has refs"
+
+
+class PrefixCache:
+    """Hash-consed prompt prefixes: ``tokens-tuple -> (n_tokens, pages)``,
+    LRU-ordered, holding one refcount on every page of every entry.
+
+    Entries are registered at every full-page prompt boundary plus the
+    partial tail (rows past ``n_tokens`` in the tail page are garbage by
+    contract — adopters copy-on-write that page and overwrite from the
+    divergence point).  ``lookup`` returns the longest registered prefix
+    strictly shorter than the prompt, so the admitting request always
+    recomputes at least its last position (the first-token logits must
+    exist).
+    """
+
+    def __init__(self, max_entries: int = 128):
+        self.max_entries = max_entries
+        self.entries: "OrderedDict[tuple, Tuple[int, Tuple[int, ...]]]" = \
+            OrderedDict()
+        self._lengths: Counter = Counter()
+        self.hits = 0
+        self.evictions = 0
+
+    def register(self, tokens: tuple, pages: Tuple[int, ...],
+                 pool: PagePool) -> None:
+        key = tuple(tokens)
+        if key in self.entries:
+            self.entries.move_to_end(key)
+            return
+        for pid in pages:
+            pool.incref(pid)
+        self.entries[key] = (len(key), pages)
+        self._lengths[len(key)] += 1
+        while len(self.entries) > self.max_entries:
+            self.evict_lru(pool)
+
+    def lookup(self, ctx: tuple) -> Tuple[int, Tuple[int, ...]]:
+        """Longest registered prefix of ``ctx`` with ``m <= len(ctx) - 1``;
+        returns (0, ()) on miss."""
+        for m in sorted((ln for ln in self._lengths if ln <= len(ctx) - 1),
+                        reverse=True):
+            entry = self.entries.get(tuple(ctx[:m]))
+            if entry is not None:
+                self.entries.move_to_end(tuple(ctx[:m]))
+                self.hits += 1
+                return m, entry[1]
+        return 0, ()
+
+    def evict_lru(self, pool: PagePool) -> bool:
+        if not self.entries:
+            return False
+        key, (n, pages) = self.entries.popitem(last=False)
+        self._lengths[n] -= 1
+        if not self._lengths[n]:
+            del self._lengths[n]
+        for pid in pages:
+            pool.decref(pid)
+        self.evictions += 1
+        return True
+
+    def clear(self, pool: PagePool) -> None:
+        while self.evict_lru(pool):
+            pass
+
+    def registered_pages(self) -> List[Tuple[int, ...]]:
+        return [pages for _n, pages in self.entries.values()]
+
+
+class _PagedSlot(_Slot):
+    """One decode lane plus its paged state."""
+
+    __slots__ = ("table", "ctx", "done", "phase", "needs_first", "admit_seq")
+
+    def __init__(self):
+        super().__init__()
+        self.table: List[int] = []     # physical page ids, logical order
+        self.ctx: tuple = ()           # tokens to prefill (prompt [+carry])
+        self.done = 0                  # prefilled positions so far
+        self.phase = "decode"          # "prefill" | "decode"
+        self.needs_first = True        # sample token 0 from prefill logits?
+        self.admit_seq = -1            # admission order (preemption picks max)
+
+
+class PagedServeEngine(ServeEngine):
+    """See module docstring.  Construct via ``ServeEngine(..., paged=True)``
+    (or :meth:`ServeEngine.from_checkpoint` with ``paged=True``); the
+    scheduler surface — ``submit`` / ``step`` / ``run`` / ``completions`` —
+    is the dense engine's unchanged.
+    """
+
+    def __init__(self, cfg, params, *, page_size: int = 8,
+                 pages: Optional[int] = None,
+                 prefill_chunk: Optional[int] = None,
+                 prefix_sharing: bool = True, prefix_entries: int = 128,
+                 spec_decode: bool = False, spec_k: int = 3,
+                 draft_policy=None, kv_quant=True, paged: bool = True,
+                 **kw):
+        del paged                      # consumed by ServeEngine.__new__
+        if page_size < 1:
+            raise ValueError(f"page_size={page_size} must be >= 1")
+        self.page_size = page_size
+        self._pages_arg = pages
+        self.prefill_chunk = prefill_chunk
+        self.prefix_sharing = prefix_sharing
+        self._prefix_entries = prefix_entries
+        self.spec_decode = spec_decode
+        self.spec_k = spec_k
+        self._draft_policy_arg = draft_policy
+        if not kv_quant:
+            raise ValueError("the paged engine stores pages in the int8 KV "
+                             "codec; kv_quant must name a kv_cache spec "
+                             "(True/'kv_int8:8'), not False")
+        super().__init__(cfg, params, kv_quant=kv_quant, **kw)
+        self._draft_policy = (draft_policy if draft_policy is not None
+                              else default_draft_policy(
+                                  self.policy, self.weight_bits is not None))
+        if spec_k < 1:
+            raise ValueError(f"spec_k={spec_k} must be >= 1")
+        self.spec_stats = SpecStats()
+        self.page_usage: List[int] = []      # pages in use, per step
+        self.page_events: Dict[str, int] = {
+            "prefix_hits": 0, "cow_copies": 0, "preemptions": 0,
+            "registered": 0}
+        self._resume: deque = deque()        # (Request, carried tokens)
+        self._admit_counter = 0
+        self._chunk_fns: dict = {}
+        self._insert_page_fns: dict = {}
+        self._copy_fn = None
+        self._spec_fns: dict = {}
+
+    # -- construction ------------------------------------------------------
+    def _init_cache(self):
+        if self.kv_spec is None:
+            raise ValueError(f"{self.cfg.name}: paged serving requires the "
+                             f"int8 KV cache")
+        if self.model.init_paged_pool is None:
+            raise ValueError(f"{self.cfg.name}: no paged-pool support for "
+                             f"this family")
+        if self.max_seq % self.page_size:
+            raise ValueError(f"max_seq={self.max_seq} must be a multiple of "
+                             f"page_size={self.page_size} (block tables "
+                             f"cover whole pages)")
+        self.nb = self.max_seq // self.page_size
+        self.n_pages = (self._pages_arg if self._pages_arg is not None
+                        else 1 + self.slots * self.nb)
+        if self.prefill_chunk is None:
+            self.prefill_chunk = self.max_seq
+        self.pool_host = PagePool(self.n_pages, self.page_size)
+        self._prefix = PrefixCache(self._prefix_entries)
+        # replace the per-slot lanes with paged slots (the base class built
+        # plain ones before calling us)
+        self._slots = [_PagedSlot() for _ in range(self.slots)]
+        return self.model.init_paged_pool(self.cfg, self.n_pages,
+                                          self.page_size)
+
+    # -- jitted steps ------------------------------------------------------
+    def _step_fn(self, params, pool, tok, pos, table, rids, counts, temp,
+                 topk, topp):
+        keys = slot_keys(self._base_key, rids, counts)
+        logits, pool = self.model.paged_decode(
+            params, pool, {"tokens": tok[:, None]}, self.policy, table, pos,
+            kv_quant=self.kv_spec)
+        nxt = sample_tokens(logits[:, -1], keys, temp, topk,
+                            self.cfg.vocab_size, topp)
+        return pool, nxt
+
+    def _chunk_fn(self, C: int):
+        """Jitted (1, C) chunk forward, compiled once per chunk width."""
+        fn = self._chunk_fns.get(C)
+        if fn is None:
+            def run(params, pool, toks, table, start):
+                return self.model.paged_decode(
+                    params, pool, {"tokens": toks}, self.policy, table,
+                    start, kv_quant=self.kv_spec)
+            fn = self._chunk_fns[C] = jax.jit(run, donate_argnums=(1,))
+        return fn
+
+    def _insert_pages(self, pool, kv, table_row):
+        """Scatter a fp prefill bucket (L, 1, lb, flat) into the slot's
+        pages, quantizing rows exactly like the dense engine's lane insert.
+        The whole bucket slab is written (compiled per bucket): rows past
+        the real context land in the partial tail page or the garbage page
+        and stay masked until overwritten — the same write-before-expose
+        argument as the dense ``_insert``."""
+        lb = kv["k"].shape[2]
+        fn = self._insert_page_fns.get(lb)
+        if fn is None:
+            P = self.page_size
+            bits = self.kv_spec.bits or 8
+
+            def ins(pool, kv, table):
+                offs = jnp.arange(lb, dtype=jnp.int32)
+                pids = table[offs // P]
+                rows = offs % P
+                out = dict(pool)
+                for side in ("k", "v"):
+                    codes, scale, zero = quantize_kv_rows(kv[side], bits)
+                    lane = dict(pool[side])
+                    lane["codes"] = lane["codes"].at[:, pids, rows].set(
+                        codes[:, 0])
+                    lane["scale"] = lane["scale"].at[:, pids, rows].set(
+                        scale[:, 0])
+                    lane["zero"] = lane["zero"].at[:, pids, rows].set(
+                        zero[:, 0])
+                    out[side] = lane
+                return out
+            fn = self._insert_page_fns[lb] = jax.jit(ins, donate_argnums=(0,))
+        return fn(pool, kv, table_row)
+
+    def _copy_page(self, pool, src: int, dst: int):
+        """Device copy of one physical page across all layers and both
+        sides — the copy-on-write at a shared partial-page divergence."""
+        if self._copy_fn is None:
+            def cp(pool, src, dst):
+                return jax.tree.map(
+                    lambda leaf: leaf.at[:, dst].set(leaf[:, src]), pool)
+            self._copy_fn = jax.jit(cp, donate_argnums=(0,))
+        return self._copy_fn(pool, jnp.int32(src), jnp.int32(dst))
+
+    # -- page pressure -----------------------------------------------------
+    def _alloc_page(self, requester: _PagedSlot) -> Optional[int]:
+        """One page, applying pressure in order: free list -> evict
+        prefix-cache LRU entries -> preempt the youngest request *younger
+        than the requester*.  The age bound is the forward-progress
+        guarantee: the oldest resident request can never be preempted, so
+        it always completes and frees its pages — preemption cascades can
+        thrash, but never livelock."""
+        while True:
+            pid = self.pool_host.alloc()
+            if pid is not None:
+                return pid
+            if self._prefix.evict_lru(self.pool_host):
+                continue
+            victim = None
+            for slot in self._slots:
+                if slot.active and slot is not requester \
+                        and slot.admit_seq > requester.admit_seq:
+                    if victim is None or slot.admit_seq > victim.admit_seq:
+                        victim = slot
+            if victim is None:
+                return None
+            self._preempt(victim)
+
+    def _ensure_blocks(self, slot: _PagedSlot, n_blocks: int) -> bool:
+        while len(slot.table) < n_blocks:
+            pid = self._alloc_page(slot)
+            if pid is None:
+                return False
+            slot.table.append(pid)
+        return True
+
+    def _preempt(self, slot: _PagedSlot) -> None:
+        """Free the slot's pages and re-queue its request (front) with the
+        generated tokens carried; it re-prefills when pages free up.
+        Sampling keys are (seed, rid, token index) — resumption emits the
+        tokens the request would have gotten anyway."""
+        self.page_events["preemptions"] += 1
+        for pid in slot.table:
+            self.pool_host.decref(pid)
+        self._resume.appendleft((slot.req, list(slot.tokens), slot.admit_seq))
+        self._reset_slot(slot)
+
+    def _reset_slot(self, slot: _PagedSlot) -> None:
+        slot.req = None
+        slot.tokens = []
+        slot.pos = 0
+        slot.table = []
+        slot.ctx = ()
+        slot.done = 0
+        slot.phase = "decode"
+        slot.needs_first = True
+
+    def _finish(self, slot: _PagedSlot, reason: str) -> None:
+        for pid in slot.table:
+            self.pool_host.decref(pid)
+        slot.table = []
+        super()._finish(slot, reason)
+        self._reset_slot(slot)
+
+    # -- admission / prefill -----------------------------------------------
+    def _table_row(self, slot: _PagedSlot) -> np.ndarray:
+        row = np.zeros((self.nb,), np.int32)
+        row[:len(slot.table)] = slot.table
+        return row
+
+    def _register_prefix(self, slot: _PagedSlot) -> None:
+        if not self.prefix_sharing:
+            return
+        prompt = slot.req.prompt
+        lp, P = len(prompt), self.page_size
+        for b in range(P, lp + 1, P):
+            self._prefix.register(prompt[:b], tuple(slot.table[:b // P]),
+                                  self.pool_host)
+            self.page_events["registered"] += 1
+        if lp % P:
+            self._prefix.register(prompt,
+                                  tuple(slot.table[:_ceil_div(lp, P)]),
+                                  self.pool_host)
+            self.page_events["registered"] += 1
+
+    def _adopt_prefix(self, slot: _PagedSlot, ctx: tuple) -> int:
+        """Adopt the longest registered prefix of ``ctx``: share the full
+        pages, copy-on-write a partial tail page.  Returns the number of
+        positions already materialized (0 on miss)."""
+        if not self.prefix_sharing:
+            return 0
+        m, pages = self._prefix.lookup(ctx)
+        if not m:
+            return 0
+        P = self.page_size
+        full, partial = m // P, m % P
+        for pid in pages[:full]:
+            self.pool_host.incref(pid)
+            slot.table.append(pid)
+        if partial:
+            # pin the divergence page across allocation pressure: the
+            # alloc below may evict the very registry entry these pages
+            # came from, and an unpinned src could be freed + recycled as
+            # our dst before the copy runs
+            src = pages[full]
+            self.pool_host.incref(src)
+            dst = self._alloc_page(slot)
+            if dst is None:
+                # can't copy the divergence page — fall back to the full
+                # boundary (recompute the partial rows instead)
+                m = full * P
+            else:
+                self._cache = self._copy_page(self._cache, src, dst)
+                slot.table.append(dst)
+                self.page_events["cow_copies"] += 1
+            self.pool_host.decref(src)
+        if m:
+            self.page_events["prefix_hits"] += 1
+        return m
+
+    def _bucket_prefill(self, slot: _PagedSlot) -> bool:
+        """Whole-context fp prefill through the dense engine's bucket path,
+        scattered into pages — bit-identical inputs to the dense engine's
+        admission, which is what makes paged↔dense token parity exact."""
+        ctx = slot.ctx
+        n = len(ctx)
+        if not self._ensure_blocks(slot, _ceil_div(n, self.page_size)):
+            return False
+        logits, kv = self._prefill(np.asarray(ctx, np.int32)[None])
+        self._cache = self._insert_pages(self._cache, kv,
+                                         jnp.asarray(self._table_row(slot)))
+        self._finish_prefill(slot, logits, last_row=None)
+        return True
+
+    def _chunk_prefill_step(self, slot: _PagedSlot) -> bool:
+        """Advance one fixed-size chunk of a long (or prefix-resumed)
+        prompt through the paged multi-token forward."""
+        C = self.prefill_chunk
+        ctx, n = slot.ctx, len(slot.ctx)
+        start = slot.done
+        take = min(C, n - start)
+        blocks = _ceil_div(start + take, self.page_size)
+        if not self._ensure_blocks(slot, blocks):
+            return False
+        buf = np.zeros((1, C), np.int32)
+        buf[0, :take] = ctx[start:start + take]
+        logits, self._cache = self._chunk_fn(C)(
+            self.params, self._cache, jnp.asarray(buf),
+            jnp.asarray(self._table_row(slot)[None]),
+            jnp.asarray([start], np.int32))
+        slot.done = start + take
+        if slot.done >= n:
+            self._finish_prefill(slot, logits, last_row=take - 1)
+        return True
+
+    def _finish_prefill(self, slot: _PagedSlot, logits, last_row) -> None:
+        req = slot.req
+        if slot.needs_first:
+            lg = logits[0, -1] if last_row is None else logits[0, last_row]
+            first = int(self._sample1(
+                lg, slot_keys(self._base_key,
+                              jnp.asarray([req.rid], jnp.int32),
+                              jnp.asarray([0], jnp.int32))[0],
+                req.temperature, req.top_k, req.top_p))
+            slot.tokens = [first]
+        slot.pos = len(slot.ctx)
+        slot.done = len(slot.ctx)
+        slot.phase = "decode"
+        if slot.needs_first:
+            self._register_prefix(slot)
+
+    def _admit(self):
+        for slot in self._slots:
+            if slot.active:
+                continue
+            if self._resume:
+                # a preempted request keeps its original admission age, so
+                # on readmission it may reclaim pages from anything that
+                # arrived after it (see _alloc_page's progress argument)
+                req, carried, seq = self._resume.popleft()
+            elif self._queue:
+                req, carried, seq = (self._queue.popleft(), [],
+                                     self._admit_counter)
+                self._admit_counter += 1
+            else:
+                continue
+            slot.req = req
+            slot.tokens = list(carried)
+            slot.needs_first = not carried
+            slot.admit_seq = seq
+            ctx = req.prompt + tuple(carried[:-1])
+            slot.ctx = ctx
+            m = self._adopt_prefix(slot, ctx)
+            slot.done = m
+            slot.pos = m
+            if m == 0 and len(ctx) <= self.prefill_chunk:
+                ok = self._bucket_prefill(slot)
+            else:
+                slot.phase = "prefill"
+                ok = self._chunk_prefill_step(slot)
+            if not ok:
+                # not even with preemption pressure — push back and stop
+                # admitting this step
+                carried = list(slot.tokens)
+                for pid in slot.table:
+                    self.pool_host.decref(pid)
+                self._resume.appendleft((slot.req, carried, slot.admit_seq))
+                self._reset_slot(slot)
+                break
+        self._evict()
+
+    # -- the loop ----------------------------------------------------------
+    def step(self) -> int:
+        self._evict()
+        self._admit()
+        for slot in self._slots:
+            if slot.active and slot.phase == "prefill":
+                if not self._chunk_prefill_step(slot):
+                    self._preempt(slot)
+        self._evict()
+        decode = [s for s in self._slots
+                  if s.active and s.phase == "decode"]
+        self.page_usage.append(self.pool_host.in_use)
+        if not decode:
+            if not any(s.active for s in self._slots) \
+                    and (self._queue or self._resume):
+                raise RuntimeError(
+                    f"page pool ({self.n_pages} pages x {self.page_size} "
+                    f"rows) cannot hold a single queued request; grow "
+                    f"`pages` or shrink prompts")
+            return 0
+        if self.spec_decode:
+            fits = all(s.pos + self.spec_k <= self.max_seq - 1
+                       for s in decode)
+            if fits and all(
+                    self._ensure_blocks(
+                        s, (s.pos + self.spec_k) // self.page_size + 1)
+                    for s in decode if s.active):
+                decode = [s for s in self._slots
+                          if s.active and s.phase == "decode"]
+                if decode:
+                    return self._spec_step(decode)
+                return 0
+            self.spec_stats.fallback_steps += 1
+        return self._plain_step()
+
+    def _plain_step(self) -> int:
+        B = self.slots
+        for slot in self._slots:
+            if slot.active and slot.phase == "decode":
+                if not self._ensure_blocks(slot,
+                                           slot.pos // self.page_size + 1):
+                    self._preempt(slot)
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        rids = np.full((B,), -1, np.int32)
+        counts = np.zeros((B,), np.int32)
+        temp = np.zeros((B,), np.float32)
+        topk = np.zeros((B,), np.int32)
+        topp = np.zeros((B,), np.float32)
+        table = np.zeros((B, self.nb), np.int32)
+        live = []
+        for i, slot in enumerate(self._slots):
+            if not slot.active or slot.phase != "decode":
+                continue
+            live.append(i)
+            tok[i] = slot.tokens[-1]
+            pos[i] = slot.pos
+            rids[i] = slot.req.rid
+            counts[i] = len(slot.tokens)
+            temp[i] = slot.req.temperature
+            topk[i] = slot.req.top_k
+            topp[i] = slot.req.top_p
+            table[i] = self._table_row(slot)
+        if not live:
+            return 0
+        t0 = time.perf_counter()
+        self._cache, nxt = self._decode(
+            self.params, self._cache, jnp.asarray(tok), jnp.asarray(pos),
+            jnp.asarray(table), jnp.asarray(rids), jnp.asarray(counts),
+            jnp.asarray(temp), jnp.asarray(topk), jnp.asarray(topp))
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        dt = time.perf_counter() - t0
+        emitted = 0
+        for i in live:
+            slot = self._slots[i]
+            slot.tokens.append(int(nxt[i]))
+            slot.pos += 1
+            emitted += 1
+        self.step_times.append((dt, emitted))
+        return emitted
+
+    def run(self, max_steps=None):
+        """Base drain loop, extended to count preempted requests waiting in
+        the resume queue as pending work."""
+        steps = 0
+        while self._queue or self._resume \
+                or any(s.active for s in self._slots):
+            self.step()
+            steps += 1
+            if max_steps is not None and steps >= max_steps:
+                break
+        self._evict()
+        done = self._completions
+        self._completions = {}
+        return done
+
+    # -- speculative decode ------------------------------------------------
+    def _spec_fn(self, name: str):
+        fn = self._spec_fns.get(name)
+        if fn is not None:
+            return fn
+        vocab = self.cfg.vocab_size
+
+        if name == "draft":
+            def draft(params, pool, tok, table, pos):
+                logits, pool = self.model.paged_decode(
+                    params, pool, {"tokens": tok[:, None]},
+                    self._draft_policy, table, pos, kv_quant=self.kv_spec)
+                g = jnp.argmax(logits[:, -1, :vocab], axis=-1)
+                return pool, g.astype(jnp.int32)
+            fn = jax.jit(draft, donate_argnums=(1,))
+        else:
+            def verify(params, pool, prop, table, pos):
+                logits, pool = self.model.paged_decode(
+                    params, pool, {"tokens": prop}, self.policy, table,
+                    pos, kv_quant=self.kv_spec)
+                g = jnp.argmax(logits[:, :, :vocab], axis=-1)
+                return pool, g.astype(jnp.int32), logits[:, 0]
+            fn = jax.jit(verify, donate_argnums=(1,))
+        self._spec_fns[name] = fn
+        return fn
+
+    def _spec_step(self, decode: List[_PagedSlot]) -> int:
+        """One propose/verify round: k draft steps (aggressive policy,
+        greedy, provisional KV) + one (B, k+1) verify forward that
+        overwrites those rows with target-policy KV, then exact greedy
+        acceptance per slot.  Emits 1..k+1 tokens per greedy slot;
+        temperature slots take one token sampled from the verify's
+        first-position logits."""
+        B, k = self.slots, self.spec_k
+        tok = np.zeros((B,), np.int32)
+        pos = np.zeros((B,), np.int32)
+        table = np.zeros((B, self.nb), np.int32)
+        lanes = []
+        for i, slot in enumerate(self._slots):
+            if slot in decode:
+                lanes.append(i)
+                tok[i] = slot.tokens[-1]
+                pos[i] = slot.pos
+                table[i] = self._table_row(slot)
+        table_dev = jnp.asarray(table)
+        pos_dev = jnp.asarray(pos)
+        prop = np.zeros((B, k + 1), np.int32)
+        prop[:, 0] = tok
+        t0 = time.perf_counter()
+        cur = tok
+        draft = self._spec_fn("draft")
+        for j in range(k):
+            self._cache, g = draft(self.params, self._cache,
+                                   jnp.asarray(cur), table_dev, pos_dev + j)
+            cur = np.asarray(g)
+            prop[:, j + 1] = cur
+        self._cache, gv, logits0 = self._spec_fn("verify")(
+            self.params, self._cache, jnp.asarray(prop), table_dev, pos_dev)
+        gv = np.asarray(jax.block_until_ready(gv))
+        dt = time.perf_counter() - t0
+        emitted_total = 0
+        for i in lanes:
+            slot = self._slots[i]
+            req = slot.req
+            if req.temperature > 0.0:
+                key = slot_keys(self._base_key,
+                                jnp.asarray([req.rid], jnp.int32),
+                                jnp.asarray([len(slot.tokens)], jnp.int32))[0]
+                out = [int(self._sample1(logits0[i], key, req.temperature,
+                                         req.top_k, req.top_p))]
+            else:
+                out = greedy_accept(prop[i, 1:], gv[i])
+                self.spec_stats.proposed += k
+                self.spec_stats.accepted += len(out) - 1
+            if req.eos_id is not None and req.eos_id in out:
+                out = out[:out.index(req.eos_id) + 1]
+            out = out[:req.max_new - len(slot.tokens)]
+            slot.tokens.extend(out)
+            slot.pos += len(out)
+            emitted_total += len(out)
+        self.spec_stats.spec_steps += 1
+        self.spec_stats.emitted += emitted_total
+        self.step_times.append((dt, emitted_total))
+        return emitted_total
+
+    # -- introspection -----------------------------------------------------
+    @property
+    def queued(self) -> int:
+        return len(self._queue) + len(self._resume)
+
+    def pool_stats(self) -> dict:
+        usage = self.page_usage or [0]
+        return {
+            "n_pages": self.n_pages,
+            "page_size": self.page_size,
+            "pages_in_use": self.pool_host.in_use,
+            "peak_pages_in_use": self.pool_host.peak_in_use,
+            "mean_utilization": float(np.mean(usage)) /
+                                max(self.n_pages - 1, 1),
+            "peak_utilization": self.pool_host.peak_in_use /
+                                max(self.n_pages - 1, 1),
+            "prefix_entries": len(self._prefix.entries),
+            **self.page_events,
+        }
+
+    def check_invariants(self) -> None:
+        """Refcount/table cross-check for the churn tests."""
+        self.pool_host.check(
+            [s.table for s in self._slots if s.active],
+            self._prefix.registered_pages())

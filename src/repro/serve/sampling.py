@@ -1,4 +1,4 @@
-"""Token sampling for the serving engine: greedy, temperature, top-k.
+"""Token sampling for the serving engine: greedy, temperature, top-k, top-p.
 
 All jittable and batched over decode slots, with *per-slot* sampling
 parameters (each resident request carries its own temperature/top-k) and
@@ -33,13 +33,23 @@ def slot_keys(base_key: jax.Array, rids: jax.Array,
 
 
 def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
-                  top_k: jax.Array, vocab_size: int) -> jax.Array:
+                  top_k: jax.Array, vocab_size: int,
+                  top_p: jax.Array = None) -> jax.Array:
     """Sample one token per slot.  logits: (B, Vp); keys: (B,) PRNG keys
-    (stacked); temperature/top_k: (B,) — ``temperature <= 0`` means greedy,
-    ``top_k <= 0`` disables the top-k filter.  Returns (B,) int32.
+    (stacked); temperature/top_k/top_p: (B,) — ``temperature <= 0`` means
+    greedy, ``top_k <= 0`` disables the top-k filter, ``top_p`` outside
+    ``(0, 1)`` (or ``None``) disables the nucleus filter.  Returns (B,)
+    int32.
 
     Padded-vocab logits (Vp > vocab_size) are masked before everything else
-    so padding rows can never be emitted.
+    so padding rows can never be emitted.  Filters compose in the standard
+    warper order — temperature scaling, then top-k, then top-p: the nucleus
+    is the smallest set of (surviving) tokens whose temperature-scaled
+    probabilities sum past ``top_p``, and the top-1 token always survives.
+    The determinism contract is unchanged: the only randomness is
+    ``categorical(key, ...)`` under the ``fold_in(fold_in(seed, rid),
+    token_idx)`` keys, so adding a nucleus cut never perturbs *which*
+    uniform a request's next token consumes.
     """
     B, vp = logits.shape
     logits = logits.astype(jnp.float32)
@@ -53,5 +63,19 @@ def sample_tokens(logits: jax.Array, keys: jax.Array, temperature: jax.Array,
     filtered = jnp.where(logits >= thresh, logits, -jnp.inf)
 
     temp = jnp.maximum(temperature, 1e-6)[:, None]
+    if top_p is not None:
+        # nucleus cut on the post-top-k, temperature-scaled distribution:
+        # keep the shortest descending-probability prefix whose cumulative
+        # mass reaches top_p (ties at the cut probability are all kept)
+        probs = jax.nn.softmax(filtered / temp, axis=-1)
+        sp = jnp.sort(probs, axis=-1)[:, ::-1]
+        cum = jnp.cumsum(sp, axis=-1)
+        n_keep = jnp.sum((cum - sp) < top_p[:, None], axis=-1)
+        p_thresh = jnp.take_along_axis(sp, jnp.maximum(n_keep - 1, 0)[:, None],
+                                       axis=1)
+        nucleus = jnp.where(probs >= p_thresh, filtered, -jnp.inf)
+        active = ((top_p > 0.0) & (top_p < 1.0))[:, None]
+        filtered = jnp.where(active, nucleus, filtered)
+
     sampled = jax.vmap(jax.random.categorical)(keys, filtered / temp)
     return jnp.where(temperature > 0.0, sampled.astype(jnp.int32), greedy)

@@ -1,0 +1,108 @@
+"""Self-speculative decoding: the draft model is the *same* parameters
+under a more aggressive low-bit quantization policy.
+
+Classic speculative decoding needs a second, smaller model; the quantizer
+registry makes that free here — ``QuantPolicy.overrides`` can re-resolve
+every forward GEMM of the *target* parameters at a lower width (in the
+spirit of 1-Bit FQT pushing widths down where error tolerance allows), so
+the draft shares weights, KV pages, and compiled layer stack with the
+target.  The paged engine (serve/paged.py) runs the loop:
+
+  1. **propose** — ``k`` sequential one-token paged decode steps under the
+     draft policy, greedy, writing provisional (draft-coded) KV rows into
+     the request's own pages at positions ``pos+1 .. pos+k``;
+  2. **verify** — ONE multi-token paged forward of the chunk
+     ``[t0, d1 .. dk]`` under the target policy, which overwrites those
+     same rows with target-coded KV (so accepted or not, the cache ends
+     exactly as target-policy decode would have left it);
+  3. **accept** — :func:`greedy_accept`: the target's greedy outputs
+     ``g0 .. gk`` are emitted while they confirm the draft
+     (``d_j == g_{j-1}``), plus the first disagreeing target token — m in
+     [1, k+1] tokens per step, every one of them *exactly* what plain
+     target greedy decode would have produced.
+
+Rows past the accepted point hold KV for rejected draft tokens; they are
+dead weight, not corruption — the engine's write-before-expose invariant
+(a position is rewritten when a real token is fed there, strictly before
+the causal mask exposes it) already covers them.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from ..core import QuantPolicy, RoleOverride
+
+__all__ = ["SpecStats", "default_draft_policy", "greedy_accept"]
+
+
+# The aggressive widths the default self-draft runs at: 4-bit activations
+# (and 4-bit weights when the engine has not already bit-packed them at a
+# fixed width).  Deterministic PTQ — the draft is inference, Sec. 2.1's
+# forward rules apply.
+_DRAFT_ACT_SPEC = "ptq_det:4"
+_DRAFT_WEIGHT_SPEC = "ptq_det:4"
+
+
+def default_draft_policy(policy: QuantPolicy,
+                         packed_weights: bool = False) -> QuantPolicy:
+    """Derive the self-draft policy from the target's: append a catch-all
+    override dropping forward activations (and, for fp32-resident weights,
+    forward weights) to 4 bits.  Appended last, so it wins every path —
+    including any per-path overrides the target policy carries.
+
+    ``packed_weights=True`` (the engine loaded ``weight_bits``-packed
+    parameters): the resident weights are already quantized at a fixed
+    width and *cannot* be re-quantized per policy, so only the activation
+    width drops.
+    """
+    roles = {"fwd_act": _DRAFT_ACT_SPEC}
+    if not packed_weights:
+        roles["fwd_weight"] = _DRAFT_WEIGHT_SPEC
+    return dataclasses.replace(
+        policy,
+        overrides=tuple(policy.overrides) + (("", RoleOverride.of(roles)),))
+
+
+@dataclasses.dataclass
+class SpecStats:
+    """Acceptance accounting across an engine's lifetime (per-run rates are
+    the bench's job — it snapshots and diffs)."""
+
+    proposed: int = 0          # draft tokens proposed (k per spec step/slot)
+    accepted: int = 0          # of those, confirmed by the target
+    emitted: int = 0           # tokens emitted by spec steps (incl. the +1)
+    spec_steps: int = 0        # propose+verify rounds run
+    fallback_steps: int = 0    # plain steps taken where spec didn't fit
+
+    @property
+    def acceptance_rate(self) -> float:
+        return self.accepted / self.proposed if self.proposed else 0.0
+
+    def as_dict(self) -> dict:
+        return {"proposed": self.proposed, "accepted": self.accepted,
+                "emitted": self.emitted, "spec_steps": self.spec_steps,
+                "fallback_steps": self.fallback_steps,
+                "acceptance_rate": self.acceptance_rate}
+
+
+def greedy_accept(drafted: np.ndarray, target_greedy: np.ndarray):
+    """Exact greedy acceptance for one slot.
+
+    drafted: (k,) the draft's proposals ``d1 .. dk``; target_greedy: (k+1,)
+    the target's greedy picks ``g0 .. gk``, where ``g_j`` conditions on
+    ``[.., t0, d1 .. d_j]``.  Returns the emitted tokens ``g0 .. g_m`` with
+    ``m`` = the longest prefix where the draft matched — every emitted
+    token equals what sequential target greedy decode would produce,
+    because ``d_j == g_{j-1}`` means ``g_j`` conditioned on exactly the
+    accepted context.
+    """
+    k = len(drafted)
+    out = [int(target_greedy[0])]
+    for j in range(k):
+        if int(drafted[j]) != int(target_greedy[j]):
+            break
+        out.append(int(target_greedy[j + 1]))
+    return out
